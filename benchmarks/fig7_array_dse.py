@@ -1,0 +1,46 @@
+"""Fig. 7 reproduction: OPE array-size DSE across workloads.
+
+Sweeps (R, C) under C<=8, T*R*C<=1024; reports relative EDP (vs the 4x4
+compact baseline) per workload + the aggregated metric M, and the paper's
+headline deltas: best config vs DEAP-CNNs (R=113,C=9) and vs compact 4x4.
+Paper claims: -64% vs DEAP, -26% vs compact; winner (R=8,C=8).
+"""
+
+from __future__ import annotations
+
+from repro.configs.paper_cnns import WORKLOADS
+from repro.core import dse
+from repro.core.constants import COMPACT_4X4
+
+
+def run(verbose: bool = True, osa: bool = False) -> dict:
+    from repro.core import energy as E
+    wls = [dse.Workload(n, layers) for n, layers in WORKLOADS.items()]
+    pts = dse.sweep(wls, osa=E.OSA_OPTIMAL if osa else E.NO_OSA,
+                    batch=128)
+    best = pts[0]
+    deap = next(p for p in pts if p.ope.rows == 113)
+    compact = next(p for p in pts if p.ope == COMPACT_4X4)
+
+    if verbose:
+        hdr = f"{'config':16s} {'geomean':>8s} {'worst':>8s} {'M':>8s}  " \
+            + " ".join(f"{w.name[:9]:>9s}" for w in wls)
+        print(hdr)
+        for p in pts[:10] + [deap, compact]:
+            row = " ".join(f"{p.rel_edp[w.name]:9.3f}" for w in wls)
+            print(f"{p.label:16s} {p.geomean:8.3f} {p.worst:8.3f} "
+                  f"{p.metric:8.3f}  {row}")
+        print(f"\nbest = {best.label}")
+        print(f"aggregated relative EDP: best vs DEAP-CNNs: "
+              f"{(1 - best.metric / deap.metric) * 100:.1f}% lower "
+              f"(paper: 64%)")
+        print(f"aggregated relative EDP: best vs compact 4x4: "
+              f"{(1 - best.metric / compact.metric) * 100:.1f}% lower "
+              f"(paper: 26%)")
+    return {"best": best, "deap": deap, "compact": compact,
+            "reduction_vs_deap": 1 - best.metric / deap.metric,
+            "reduction_vs_compact": 1 - best.metric / compact.metric}
+
+
+if __name__ == "__main__":
+    run()

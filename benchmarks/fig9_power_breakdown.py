@@ -1,0 +1,41 @@
+"""Fig. 9 reproduction: component-wise power with / without OSA.
+
+Average power = component energy / runtime for four CNN workloads on the
+(8,8) array.  The paper's observation to reproduce: OSA cuts OAC (PD+TIA)
+and ADC power, and also the partial-sum SRAM + main-memory traffic.
+"""
+
+from __future__ import annotations
+
+from repro.configs.paper_cnns import CNN_WORKLOADS
+from repro.core import energy as E
+from repro.core.constants import ROSA_OPTIMAL
+
+COMPONENTS = ("laser", "mrr_static", "odl_static", "sram_leak", "eo_mod",
+              "dac_prog", "pd_tia", "adc", "sram_dyn", "dram")
+
+
+def run(verbose: bool = True) -> dict:
+    out = {}
+    for name, layers in CNN_WORKLOADS.items():
+        rows = {}
+        for tag, osa in (("no_osa", E.NO_OSA), ("osa", E.OSA_OPTIMAL)):
+            bd = E.network_energy(layers, ROSA_OPTIMAL, osa=osa,
+                                  batch=128)
+            rows[tag] = {c: getattr(bd, c) / bd.latency
+                         for c in COMPONENTS}
+            rows[tag]["total"] = bd.energy / bd.latency
+        out[name] = rows
+    if verbose:
+        for name, rows in out.items():
+            print(f"\n{name}  (avg power [W])")
+            print(f"  {'component':12s} {'no OSA':>11s} {'with OSA':>11s}")
+            for c in COMPONENTS + ("total",):
+                a, b = rows["no_osa"][c], rows["osa"][c]
+                mark = " <-" if b < a * 0.7 and a > 1e-6 else ""
+                print(f"  {c:12s} {a:11.4e} {b:11.4e}{mark}")
+    return out
+
+
+if __name__ == "__main__":
+    run()

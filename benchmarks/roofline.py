@@ -1,0 +1,114 @@
+"""Roofline reporter — reads launch/dryrun.py JSON records and derives the
+three roofline terms per (arch x shape) cell (deliverable g).
+
+    compute    = HLO_FLOPs_per_dev / peak_FLOP/s      (197 TF/s bf16, v5e)
+    memory     = HLO_bytes_per_dev / HBM_bw           (819 GB/s)
+    collective = wire_bytes_per_dev / link_bw         (50 GB/s/link ICI)
+
+plus MODEL_FLOPS (6*N*D train / 2*N*D inference, N = active params) and the
+useful-compute ratio MODEL_FLOPS / HLO_FLOPs, which catches remat and
+dispatch-padding waste.  All inputs are per-device numbers parsed from the
+compiled per-device SPMD module (launch/hlo_analysis.py).
+
+Usage: PYTHONPATH=src python -m benchmarks.roofline [--dir results/dryrun]
+       [--mesh single] [--fmt md|csv]
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+SHAPES = {"train_4k": (4096, 256), "prefill_32k": (32768, 32),
+          "decode_32k": (32768, 128), "long_500k": (524288, 1)}
+
+
+def active_params(arch: str, n_params: int) -> int:
+    """Active params per token (MoE: only top-k + shared experts count)."""
+    from repro.configs import get_config
+    cfg = get_config(arch)
+    if cfg.moe is None:
+        return n_params
+    m = cfg.moe
+    n_moe_layers = cfg.n_layers - (1 if cfg.first_dense_ff else 0)
+    per_expert = 3 * m.d_model * m.d_ff
+    inactive = n_moe_layers * (m.n_experts - m.top_k) * per_expert
+    return n_params - inactive
+
+
+def model_flops(arch: str, shape: str, n_params: int) -> float:
+    seq, batch = SHAPES[shape]
+    n_act = active_params(arch, n_params)
+    if shape.startswith("train"):
+        return 6.0 * n_act * seq * batch
+    if shape.startswith("prefill"):
+        return 2.0 * n_act * seq * batch
+    return 2.0 * n_act * batch          # decode: one token per sequence
+
+
+def load(dir_: str, mesh: str) -> list[dict]:
+    recs = []
+    for path in sorted(glob.glob(os.path.join(dir_, f"*__{mesh}.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def derive(rec: dict) -> dict | None:
+    if rec.get("status") != "ok":
+        return None
+    h = rec["hlo"]
+    n_dev = rec["n_devices"]
+    t_c = h["flops"] / PEAK_FLOPS
+    t_m = h["bytes"] / HBM_BW
+    t_x = h["coll_wire_total"] / LINK_BW
+    terms = {"compute": t_c, "memory": t_m, "collective": t_x}
+    dom = max(terms, key=terms.get)
+    mf = model_flops(rec["arch"], rec["shape"], rec["n_params"])
+    useful = mf / n_dev / max(h["flops"], 1)
+    step_time = max(terms.values())          # no-overlap upper bound
+    mfu = mf / n_dev / max(step_time, 1e-30) / PEAK_FLOPS
+    return dict(arch=rec["arch"], shape=rec["shape"], mesh=rec["mesh"],
+                compute_s=t_c, memory_s=t_m, collective_s=t_x,
+                dominant=dom, model_flops=mf, useful_ratio=useful,
+                roofline_frac=min(mfu, 1.0),
+                mem_gb=(rec.get("memory", {}).get("argument_size_in_bytes")
+                        or 0) / 2**30)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="results/dryrun")
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--fmt", default="md", choices=["md", "csv"])
+    args = ap.parse_args()
+
+    rows = [d for r in load(args.dir, args.mesh) if (d := derive(r))]
+    rows.sort(key=lambda d: (d["arch"], d["shape"]))
+    if args.fmt == "csv":
+        print("arch,shape,compute_s,memory_s,collective_s,dominant,"
+              "useful_ratio,roofline_frac,mem_gb")
+        for d in rows:
+            print(f"{d['arch']},{d['shape']},{d['compute_s']:.4g},"
+                  f"{d['memory_s']:.4g},{d['collective_s']:.4g},"
+                  f"{d['dominant']},{d['useful_ratio']:.3f},"
+                  f"{d['roofline_frac']:.3f},{d['mem_gb']:.2f}")
+        return
+    print("| arch | shape | compute [s] | memory [s] | collective [s] | "
+          "dominant | useful | roofline | mem/dev GB |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for d in rows:
+        print(f"| {d['arch']} | {d['shape']} | {d['compute_s']:.3e} | "
+              f"{d['memory_s']:.3e} | {d['collective_s']:.3e} | "
+              f"{d['dominant']} | {d['useful_ratio']:.2f} | "
+              f"{d['roofline_frac']:.2f} | {d['mem_gb']:.2f} |")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,89 @@
+"""Benchmark aggregator: one entry per paper table/figure.
+
+Prints ``name,seconds,derived`` CSV rows.  The heavyweight behavioural
+benchmark (table4) runs in quick mode here; invoke it directly for the
+full four-model version used in EXPERIMENTS.md.
+
+    PYTHONPATH=src python -m benchmarks.run [--full]
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+
+    rows = []
+
+    def bench(name, fn):
+        t0 = time.time()
+        derived = fn()
+        dt = time.time() - t0
+        rows.append((name, dt, derived))
+        print(f"\n>>> {name},{dt:.1f}s,{derived}\n", flush=True)
+
+    from benchmarks import (fig7_array_dse, fig8_osa, fig9_power_breakdown,
+                            table1_modes)
+
+    def table1():
+        r = table1_modes.run()
+        return "%.1fx_ops_mixed_vs_analog" % (r["mixed"]["ops"]
+                                              / r["analog"]["ops"])
+
+    bench("table1_modes", table1)
+
+    def fig7():
+        r = fig7_array_dse.run()
+        return "best=%s;vs_deap=%.1f%%;vs_4x4=%.1f%%" % (
+            r["best"].label, r["reduction_vs_deap"] * 100,
+            r["reduction_vs_compact"] * 100)
+
+    bench("fig7_array_dse", fig7)
+
+    def fig8():
+        r = fig8_osa.run()
+        return "osa=%.1f%%;osa_ode=%.1f%%" % (
+            r["geomean_reduction_osa"] * 100,
+            r["geomean_reduction_osa_ode"] * 100)
+
+    bench("fig8_osa", fig8)
+    bench("fig9_power_breakdown",
+          lambda: "workloads=%d" % len(fig9_power_breakdown.run()))
+
+    def table4():
+        from benchmarks import table4_hybrid
+        models = None if args.full else ["alexnet"]
+        steps = 400 if args.full else 250
+        res = table4_hybrid.run(models=models, steps=steps,
+                                n_mc=3 if args.full else 2)
+        return "hybrid_vs_ws=%+.1fpp" % (
+            sum(r["accs"]["hybrid"] - r["accs"]["ws"]
+                for r in res.values()) / len(res))
+
+    bench("table4_hybrid" + ("" if args.full else "_quick"), table4)
+
+    def roofline():
+        from benchmarks import roofline as R
+        rows_ = [d for r in R.load("results/dryrun", "single")
+                 if (d := R.derive(r))]
+        if not rows_:
+            return "no_dryrun_records"
+        dom = {}
+        for d in rows_:
+            dom[d["dominant"]] = dom.get(d["dominant"], 0) + 1
+        return "cells=%d;%s" % (len(rows_), dom)
+
+    bench("roofline_table", roofline)
+
+    print("\n== summary ==")
+    for name, dt, derived in rows:
+        print(f"{name},{dt:.1f}s,{derived}")
+
+
+if __name__ == "__main__":
+    main()

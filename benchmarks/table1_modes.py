@@ -1,0 +1,45 @@
+"""Table 1 reproduction: analog vs digital vs mixed computing modes.
+
+Throughput / update-time / OPS formulas evaluated on the paper's array
+sizes, plus the energy model's view of one representative conv layer under
+each mode (robustness column comes from the behavioural sims — see
+table4_hybrid).
+"""
+
+from __future__ import annotations
+
+from repro.core import constants as C
+from repro.core import energy as E
+from repro.core.constants import ComputeMode, OPEConfig
+
+LAYER = E.LayerShape("conv3", m=64, k=1728, n=384)
+
+
+def run(verbose: bool = True) -> dict:
+    ope = OPEConfig(rows=8, cols=8, tiles=16)
+    rows = {}
+    for mode, name in [(ComputeMode.ANALOG, "analog (DEAP-CNNs)"),
+                       (ComputeMode.DIGITAL, "digital (HolyLight)"),
+                       (ComputeMode.MIXED, "mixed (ROSA)")]:
+        ops = {ComputeMode.ANALOG: E.ops_analog,
+               ComputeMode.DIGITAL: E.ops_digital,
+               ComputeMode.MIXED: E.ops_mixed}[mode](ope)
+        bd = E.layer_energy(LAYER, ope, mode=mode)
+        rows[mode.value] = dict(name=name, ops=ops, latency=bd.latency,
+                                energy=bd.energy, edp=bd.edp,
+                                oadc_energy=bd.adc + bd.pd_tia)
+    if verbose:
+        print(f"{'mode':22s} {'OPS':>12s} {'latency[s]':>12s} "
+              f"{'energy[J]':>12s} {'EDP[J*s]':>12s} {'OADC[J]':>10s}")
+        for k, r in rows.items():
+            print(f"{r['name']:22s} {r['ops']:12.3e} {r['latency']:12.3e} "
+                  f"{r['energy']:12.3e} {r['edp']:12.3e} "
+                  f"{r['oadc_energy']:10.3e}")
+        mx, an = rows["mixed"], rows["analog"]
+        print(f"\nmixed vs analog: {an['latency'] / mx['latency']:.0f}x "
+              f"faster, OPS x{mx['ops'] / an['ops']:.1f}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,24 @@
+"""The paper's hybrid-mapping pipeline on one CNN, end to end:
+
+QAT-train AlexNet-lite on synth-CIFAR -> profile per-layer IS/WS noise
+sensitivity (Fig. 6) -> join with the full-size EDP table -> balanced-
+metric plan (Sec. 3.5) -> evaluate accuracy + EDP vs WS/IS/analog.
+
+Run:  PYTHONPATH=src python examples/hybrid_mapping_cnn.py [--steps 250]
+"""
+
+import argparse
+
+from benchmarks.table4_hybrid import run_model
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--model", default="alexnet")
+    ap.add_argument("--steps", type=int, default=250)
+    args = ap.parse_args()
+    res = run_model(args.model, steps=args.steps, n_mc=2)
+    plan = res["plan"]
+    print("\nper-layer plan:")
+    for name, mp in plan.items():
+        print(f"  {name:10s} -> {mp}")

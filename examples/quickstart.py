@@ -1,0 +1,57 @@
+"""Quickstart: the paper's core pieces in ~60 lines.
+
+  1. the MRR voltage->weight physics chain (Fig. 5),
+  2. an OSA bit-serial optical matmul == its exact digital reference,
+  3. noise-aware execution under WS vs IS mapping,
+  4. the energy model: one conv layer with and without OSA,
+  5. the array-size DSE winner.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import dse, energy, mrr, osa
+from repro.core.constants import Mapping, ROSA_OPTIMAL
+from repro.core.onn_linear import RosaConfig, rosa_matmul
+from repro.configs.paper_cnns import WORKLOADS
+
+key = jax.random.PRNGKey(0)
+
+# 1. physics: program weights through the V -> dT -> d_lambda -> T -> w chain
+targets = jnp.linspace(-1, 1, 5)
+volts = mrr.voltage_of_weight(targets)
+realized = mrr.realize_weights(targets)
+noisy = mrr.realize_weights(targets, key, noise=mrr.PAPER_NOISE)
+print("targets :", targets)
+print("volts   :", jnp.round(volts, 3))
+print("ideal   :", jnp.round(realized, 4))
+print("noisy   :", jnp.round(noisy, 4))
+
+# 2. OSA optical matmul == fake-quant reference (Eq. 1 == Eq. 2)
+x = jax.random.normal(key, (4, 32))
+w = jax.random.normal(jax.random.PRNGKey(1), (32, 8))
+y_osa = osa.osa_matmul_ref(x, w)
+from repro.core.quant import fake_quant
+print("\nOSA == 8-bit reference:",
+      bool(jnp.allclose(y_osa, fake_quant(x) @ w, atol=1e-4)))
+
+# 3. WS vs IS noise placement
+for mp in (Mapping.WS, Mapping.IS):
+    cfg = RosaConfig(mapping=mp, noise=mrr.PAPER_NOISE)
+    err = jnp.mean(jnp.abs(rosa_matmul(x, w, cfg, key) - x @ w))
+    print(f"mapping={mp.value:17s} mean |err| = {float(err):.4f}")
+
+# 4. energy: OSA cuts the ADC events per output from 7 to 1
+layer = energy.LayerShape("conv3", m=64, k=1728, n=384)
+no = energy.layer_energy(layer, ROSA_OPTIMAL, osa=energy.NO_OSA, batch=128)
+ya = energy.layer_energy(layer, ROSA_OPTIMAL, osa=energy.OSA_OPTIMAL,
+                         batch=128)
+print(f"\nconv3 EDP: no-OSA {no.edp:.3e}  with-OSA {ya.edp:.3e} "
+      f"({(1 - ya.edp / no.edp) * 100:.0f}% lower)")
+
+# 5. the DSE winner across all six workloads
+wls = [dse.Workload(n, ls) for n, ls in WORKLOADS.items()]
+best = dse.best(wls, batch=128)
+print(f"DSE winner: {best.label} (paper: R=8,C=8)")

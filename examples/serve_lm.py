@@ -1,0 +1,17 @@
+"""Batched LM serving demo: prefill a prompt batch and decode greedily.
+
+Uses the reduced zamba2 (hybrid SSM + shared-attention) config so the
+example exercises the most interesting cache machinery: per-group shared
+KV caches + SSD states + conv states.
+
+Run:  PYTHONPATH=src python examples/serve_lm.py
+"""
+
+import subprocess
+import sys
+
+if __name__ == "__main__":
+    raise SystemExit(subprocess.call(
+        [sys.executable, "-m", "repro.launch.serve", "--arch", "zamba2-1.2b",
+         "--smoke", "--batch", "4", "--prompt-len", "32", "--gen", "16",
+         "--temperature", "0.7"]))

@@ -1,0 +1,15 @@
+"""repro — ROSA (microring ONN w/ optical shift-and-add) on a JAX substrate.
+
+Layers:
+  core/         the paper's contribution (physics, OSA, energy, mapping, DSE)
+  kernels/      Pallas TPU kernels for the compute hot spots (+ jnp oracles)
+  models/       pure-JAX model zoo (LM fleet + paper CNN families)
+  configs/      assigned architecture configs + paper workload tables
+  data/         deterministic synthetic data pipelines
+  optim/        optimizers and schedules
+  checkpoint/   sharded, atomic, elastic checkpointing
+  distributed/  sharding rules, gradient compression, collective helpers
+  launch/       production mesh, multi-pod dry-run, train/serve drivers
+"""
+
+__version__ = "1.0.0"

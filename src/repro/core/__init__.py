@@ -1,0 +1,13 @@
+"""ROSA core: the paper's contribution as composable JAX modules.
+
+  constants   device constants (Tables 2-3), modes, OPE configs
+  mrr         noise-aware voltage->weight chain (Eqs. 3-8) + inverse
+  quant       8-bit quantization, signed-digit / PAM plane decomposition
+  osa         optical shift-and-add semantics (Eqs. 1-2) + non-idealities
+  onn_linear  rosa_matmul: the optical MAC as a drop-in matmul w/ STE vjp
+  energy      event-count energy/latency/EDP model (Sec. 3.4)
+  mapping     layer-wise hybrid IS/WS mapping (Sec. 3.5)
+  dse         OPE array design-space exploration (Fig. 7)
+"""
+
+from repro.core import constants, dse, energy, mapping, mrr, onn_linear, osa, quant  # noqa: F401

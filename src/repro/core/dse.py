@@ -1,0 +1,96 @@
+"""OPE array-size design-space exploration (paper Sec. 3.5, Fig. 7).
+
+Sweeps (R, C) under the physical constraints C <= MAX_WDM_CHANNELS and
+T*R*C <= MAX_TOTAL_MRRS (T auto-filled to the budget), evaluates the EDP of
+every workload network, and aggregates with
+
+    G     = (prod_n EDP_n)^(1/N)            # balanced geometric mean
+    W_max = max_n EDP_n                      # worst case
+    M     = (1-lambda) * G + lambda * W_max  # robust efficiency metric
+
+EDPs are expressed *relative to a reference config per workload* before
+aggregation (the paper reports "relative EDP" vs. the compact 4x4 array) so
+no single heavy network dominates the geomean.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Sequence
+
+from repro.core import energy as E
+from repro.core.constants import (COMPACT_4X4, DEAP_HIGH_CHANNEL, ComputeMode,
+                                  Mapping, MAX_TOTAL_MRRS, MAX_WDM_CHANNELS,
+                                  OPEConfig)
+
+
+@dataclasses.dataclass
+class Workload:
+    name: str
+    layers: list[E.LayerShape]
+
+
+@dataclasses.dataclass
+class DSEPoint:
+    ope: OPEConfig
+    edp_per_workload: dict[str, float]
+    rel_edp: dict[str, float]
+    geomean: float
+    worst: float
+    metric: float
+
+    @property
+    def label(self) -> str:
+        return f"R={self.ope.rows},C={self.ope.cols},T={self.ope.tiles}"
+
+
+def default_candidates(include_baselines: bool = True) -> list[OPEConfig]:
+    """The sweep grid: all power-of-two-ish (R, C) within constraints."""
+    rs = [1, 2, 4, 8, 16, 32, 64, 128]
+    cs = [1, 2, 4, 8]
+    cands = []
+    for r in rs:
+        for c in cs:
+            if r * c <= MAX_TOTAL_MRRS and c <= MAX_WDM_CHANNELS:
+                cands.append(OPEConfig(rows=r, cols=c))
+    if include_baselines:
+        cands.append(DEAP_HIGH_CHANNEL)      # violates C<=8; kept for comparison
+    return cands
+
+
+def evaluate(ope: OPEConfig,
+             workloads: Sequence[Workload],
+             reference: OPEConfig = COMPACT_4X4,
+             lam: float = 0.3,
+             mapping: Mapping = Mapping.WS,
+             mode: ComputeMode = ComputeMode.MIXED,
+             osa: E.OSAEnergyConfig = E.NO_OSA,
+             batch: int = 1) -> DSEPoint:
+    """EDP of every workload on `ope`, relative to `reference`, aggregated."""
+    edp, rel = {}, {}
+    for wl in workloads:
+        e = E.network_energy(wl.layers, ope, mapping, mode, osa, batch=batch).edp
+        e_ref = E.network_energy(wl.layers, reference, mapping, mode, osa,
+                                 batch=batch).edp
+        edp[wl.name] = e
+        rel[wl.name] = e / e_ref
+    g = math.exp(sum(math.log(v) for v in rel.values()) / len(rel))
+    w = max(rel.values())
+    return DSEPoint(ope=ope, edp_per_workload=edp, rel_edp=rel,
+                    geomean=g, worst=w, metric=(1 - lam) * g + lam * w)
+
+
+def sweep(workloads: Sequence[Workload],
+          candidates: Sequence[OPEConfig] | None = None,
+          lam: float = 0.3,
+          **kw) -> list[DSEPoint]:
+    """Full DSE; returns points sorted by the robust metric M (best first)."""
+    candidates = candidates or default_candidates()
+    pts = [evaluate(ope, workloads, lam=lam, **kw) for ope in candidates]
+    pts.sort(key=lambda p: p.metric)
+    return pts
+
+
+def best(workloads: Sequence[Workload], **kw) -> DSEPoint:
+    return sweep(workloads, **kw)[0]

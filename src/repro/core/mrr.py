@@ -1,0 +1,219 @@
+"""Noise-aware behavioral model of MRR weight realization (paper Sec. 3.3).
+
+Implements the full physical chain of Eqs. (3)-(8):
+
+    V --(Eq.3)--> dT --(Eq.3)--> d_lambda --(Eq.4)--> T_drop(lambda_ref)
+      --(Eq.5)--> T_diff --(Eq.7)--> w
+
+together with its closed-form inverse (used to *program* a target weight),
+and the two noise injection points of Eq. (8):
+
+    V' = V + eps_DAC,          eps_DAC ~ N(0, sigma_DAC^2)
+    dT' = dT(V') + eps_th,     eps_th  ~ N(0, sigma_th^2)
+
+Everything is pure jnp and differentiable; `realize_weights` is the
+user-facing op: target weights -> programming voltages -> noisy realized
+weights.  A straight-through variant for noise-aware training lives in
+`onn_linear.py`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import constants as C
+
+
+@dataclasses.dataclass(frozen=True)
+class MRRParams:
+    """Device parameters; defaults are paper Table 2."""
+
+    lambda_0: float = C.LAMBDA_0_NM
+    lambda_ref: float = C.LAMBDA_REF_NM
+    n_eff: float = C.N_EFF
+    gamma: float = C.GAMMA_HWHM_NM
+    r_heater: float = C.R_HEATER_OHM
+    r_thermal: float = C.R_THERMAL_K_PER_MW
+    beta: float = C.BETA_TO_PER_K
+    kappa: float = C.HEATER_COUPLING
+    v_min: float = C.V_MIN
+    v_max: float = C.V_MAX
+    q_min: float = -1.0
+    q_max: float = 1.0
+
+    @property
+    def q_rng(self) -> float:
+        return self.q_max - self.q_min
+
+
+DEFAULT_PARAMS = MRRParams()
+
+
+@dataclasses.dataclass(frozen=True)
+class NoiseModel:
+    """Gaussian perturbations of Eq. (8)."""
+
+    sigma_dac: float = C.SIGMA_DAC_DEFAULT   # volts on V
+    sigma_th: float = C.SIGMA_TH_DEFAULT     # kelvin on dT
+
+    @property
+    def is_ideal(self) -> bool:
+        return self.sigma_dac == 0.0 and self.sigma_th == 0.0
+
+
+IDEAL = NoiseModel(sigma_dac=0.0, sigma_th=0.0)
+PAPER_NOISE = NoiseModel()
+
+
+# --------------------------------------------------------------------------
+# Forward chain  V -> w
+# --------------------------------------------------------------------------
+def delta_t(v, p: MRRParams = DEFAULT_PARAMS):
+    """Eq. (3) left: heater temperature rise [K] for drive voltage V.
+
+    V^2/R_h is electrical power in W; x1e3 converts to mW to match R_th's
+    K/mW unit; kappa is the calibrated heater coupling (constants.py).
+    """
+    p_heater_mw = p.kappa * (v * v / p.r_heater) * 1e3
+    return p_heater_mw * p.r_thermal
+
+
+def delta_lambda(dt, p: MRRParams = DEFAULT_PARAMS):
+    """Eq. (3) right: resonance shift [nm] for temperature rise dT [K]."""
+    bdt = p.beta * dt
+    return p.lambda_0 * bdt / (p.n_eff + bdt)
+
+
+def t_drop(lam, p: MRRParams = DEFAULT_PARAMS):
+    """Eq. (4): Lorentzian drop-port transmission probed at lambda_ref."""
+    det = lam - p.lambda_ref
+    g2 = p.gamma * p.gamma
+    return g2 / (det * det + g2)
+
+
+def t_diff(lam, p: MRRParams = DEFAULT_PARAMS):
+    """Eq. (5): differential drop-through transmission in [-1, 1]."""
+    return 2.0 * t_drop(lam, p) - 1.0
+
+
+def _t_diff_of_v(v, p: MRRParams):
+    return t_diff(p.lambda_0 + delta_lambda(delta_t(v, p), p), p)
+
+
+def transmission_endpoints(p: MRRParams = DEFAULT_PARAMS):
+    """Eq. (6): T_hi = T_diff(V_min), T_lo = T_diff(V_max).
+
+    V_min leaves the ring closest to lambda_ref (highest drop transmission);
+    V_max detunes it furthest.
+    """
+    return _t_diff_of_v(jnp.asarray(p.v_min), p), _t_diff_of_v(jnp.asarray(p.v_max), p)
+
+
+def transmission_endpoints_py(p: MRRParams = DEFAULT_PARAMS) -> tuple[float, float]:
+    """Pure-Python Eq. (6) endpoints (trace-free, for static kernel params)."""
+    import math
+
+    def td(v: float) -> float:
+        p_mw = p.kappa * (v * v / p.r_heater) * 1e3
+        dt = p_mw * p.r_thermal
+        bdt = p.beta * dt
+        lam = p.lambda_0 + p.lambda_0 * bdt / (p.n_eff + bdt)
+        det = lam - p.lambda_ref
+        g2 = p.gamma * p.gamma
+        return 2.0 * g2 / (det * det + g2) - 1.0
+
+    del math
+    return td(p.v_min), td(p.v_max)
+
+
+def weight_of_voltage(v, p: MRRParams = DEFAULT_PARAMS, noise: NoiseModel = IDEAL,
+                      key: jax.Array | None = None):
+    """Full chain Eqs. (3)-(8): drive voltage(s) -> realized weight(s).
+
+    With a non-ideal `noise` model, `key` must be provided; two independent
+    Gaussian draws perturb V (DAC) and dT (thermal crosstalk).
+    """
+    v = jnp.asarray(v)
+    if not noise.is_ideal:
+        if key is None:
+            raise ValueError("noisy realization requires a PRNG key")
+        k_dac, k_th = jax.random.split(key)
+        v = v + noise.sigma_dac * jax.random.normal(k_dac, v.shape, v.dtype)
+        dt = delta_t(v, p) + noise.sigma_th * jax.random.normal(k_th, v.shape, v.dtype)
+    else:
+        dt = delta_t(v, p)
+    lam = p.lambda_0 + delta_lambda(dt, p)
+    td = t_diff(lam, p)
+    t_hi, t_lo = transmission_endpoints(p)
+    return p.q_min + p.q_rng * (td - t_lo) / (t_hi - t_lo)   # Eq. (7)
+
+
+# --------------------------------------------------------------------------
+# Inverse chain  w -> V  (programming)
+# --------------------------------------------------------------------------
+def voltage_of_weight(w, p: MRRParams = DEFAULT_PARAMS):
+    """Closed-form inverse of the forward chain (for ideal programming).
+
+    Each stage is monotone over the operating branch (lambda detuning grows
+    away from lambda_ref as V rises), so the inverse is unique:
+
+      w -> T_diff -> T_drop -> |lam - lam_ref| -> d_lambda -> dT -> V.
+
+    Weights are clipped to the physically realizable range [q_min, q_max];
+    this is the quantizer's clamp, matching the paper's full-range mapping.
+    """
+    w = jnp.asarray(w)
+    t_hi, t_lo = transmission_endpoints(p)
+    wq = jnp.clip(w, p.q_min, p.q_max)
+    td = t_lo + (wq - p.q_min) / p.q_rng * (t_hi - t_lo)          # invert Eq. (7)
+    tdrop = 0.5 * (td + 1.0)                                       # invert Eq. (5)
+    # invert Eq. (4): detuning magnitude; the ring sits red of lambda_ref and
+    # moves further red with voltage, so lam = lambda_ref + det, det > 0.
+    det = p.gamma * jnp.sqrt(jnp.maximum(1.0 / tdrop - 1.0, 0.0))
+    lam = p.lambda_ref + det
+    dl = lam - p.lambda_0                                          # shift from rest
+    u = dl / p.lambda_0
+    dt = p.n_eff * u / (p.beta * (1.0 - u))                        # invert Eq. (3) right
+    p_heater_mw = dt / p.r_thermal
+    v2 = p_heater_mw / (p.kappa * 1e3) * p.r_heater                # invert Eq. (3) left
+    return jnp.sqrt(jnp.maximum(v2, 0.0))
+
+
+@partial(jax.jit, static_argnames=("p", "noise"))
+def realize_weights(w_target, key: jax.Array | None = None,
+                    p: MRRParams = DEFAULT_PARAMS,
+                    noise: NoiseModel = IDEAL):
+    """Program target weights onto MRRs and read back the noisy realization.
+
+    This is THE core primitive of the paper's robustness analysis: the
+    composition `weight_of_voltage(voltage_of_weight(w))` is the identity in
+    the ideal case and a stochastically perturbed identity under DAC/thermal
+    noise.  Values outside [q_min, q_max] saturate (physical clipping).
+    """
+    v = voltage_of_weight(w_target, p)
+    v = jnp.clip(v, p.v_min, p.v_max)
+    return weight_of_voltage(v, p, noise, key)
+
+
+def weight_noise_std(w_target, key: jax.Array, n_samples: int = 256,
+                     p: MRRParams = DEFAULT_PARAMS,
+                     noise: NoiseModel = PAPER_NOISE):
+    """Monte-Carlo std of the realized weight around its target.
+
+    Used by the mapping profiler to quantify how V->w gain (slope of the
+    transfer curve) shapes noise: weights programmed on the steep part of the
+    Lorentzian amplify voltage noise more than those near the tails.
+    """
+    keys = jax.random.split(key, n_samples)
+    samples = jax.vmap(lambda k: realize_weights(w_target, k, p, noise))(keys)
+    return samples.std(axis=0)
+
+
+def transfer_curve(n: int = 256, p: MRRParams = DEFAULT_PARAMS):
+    """(V, w) samples of the ideal transfer curve — Fig. 5(c) reproduction."""
+    v = jnp.linspace(p.v_min, p.v_max, n)
+    return v, weight_of_voltage(v, p)

@@ -1,0 +1,134 @@
+"""Optical Shift-and-Add (OSA) module semantics — paper Sec. 3.1, Fig. 3(c).
+
+The OSA module performs, purely in the optical domain,
+
+    y = sum_k sum_t 2^(t-N_T) * w_k * b_{k,t}        (Eq. 1)
+      = sum_k w_k * x_k                              (Eq. 2)
+
+where the *shift* (power-of-two scaling of bit slot t) is a chain of 1:1
+light splitters and the temporal alignment of slots is done by optical delay
+lines (ODLs); the *add* is photodetection + TIA, which natively integrates
+aligned optical power.
+
+The payoff is architectural, not mathematical: without OSA the photocurrent
+must be digitized once per bit slot (N_T ADC conversions per output); with
+OSA the slots accumulate optically and the ADC fires once per output.  The
+energy model (energy.py) counts exactly that.
+
+This module provides:
+  * `osa_mac` / `osa_matmul_ref`: bit-exact reference semantics (the oracle
+    for the Pallas kernel in kernels/osa_matmul).
+  * non-ideality knobs: splitter imbalance (the divide-by-2 ratio is not
+    exactly 1/2), per-slot ODL delay mis-alignment modeled as a multiplicative
+    slot-gain error, and ODL insertion loss per stage.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quant as Q
+
+
+@dataclasses.dataclass(frozen=True)
+class OSAConfig:
+    """Physical configuration of one OSA chain."""
+
+    n_slots: int = 7               # N_T (+1 slots indexed 0..N_T in Eq. 1)
+    pam_bits: int = 1              # 1 = balanced ternary; k>1 = PAM-2^k digits
+    splitter_imbalance: float = 0.0   # eps: splits are (0.5+eps, 0.5-eps)
+    odl_loss_db_per_stage: float = 0.0  # insertion loss per shift stage [dB]
+    slot_jitter_sigma: float = 0.0      # std of per-slot gain error from delay
+    #   mis-alignment (paper: mitigated by active phase-modulator calibration)
+
+    @property
+    def is_ideal(self) -> bool:
+        return (self.splitter_imbalance == 0.0
+                and self.odl_loss_db_per_stage == 0.0
+                and self.slot_jitter_sigma == 0.0)
+
+
+IDEAL_OSA = OSAConfig()
+
+
+def slot_gains(cfg: OSAConfig, key: jax.Array | None = None,
+               dtype=jnp.float32) -> jax.Array:
+    """Effective gain of each bit slot after the splitter/ODL chain.
+
+    Ideal slot t (t=0 LSB) passes through k*(n_slots-1-t) divide-by-two
+    stages (k = pam_bits, 1 for ternary), so its gain is 2^(k*t) in integer
+    significance units (matching quant.plane_weights / pam_plane_weights);
+    splitter imbalance / loss / jitter fold multiplicatively on top.
+    """
+    t = jnp.arange(cfg.n_slots)
+    gains = (2.0 ** (cfg.pam_bits * t)).astype(dtype)
+    if cfg.splitter_imbalance != 0.0:
+        # slot t passes through k*(n_slots-1-t) splitter stages; each stage
+        # routes the 'shifted' arm a fraction (0.5+eps) instead of 0.5.
+        stages = (cfg.pam_bits * (cfg.n_slots - 1 - t)).astype(dtype)
+        per_stage = (0.5 + cfg.splitter_imbalance) / 0.5
+        gains = gains * per_stage ** stages
+    if cfg.odl_loss_db_per_stage != 0.0:
+        stages = (cfg.pam_bits * (cfg.n_slots - 1 - t)).astype(dtype)
+        loss = 10.0 ** (-cfg.odl_loss_db_per_stage * stages / 10.0)
+        gains = gains * loss
+    if cfg.slot_jitter_sigma != 0.0:
+        if key is None:
+            raise ValueError("slot jitter requires a PRNG key")
+        gains = gains * (1.0 + cfg.slot_jitter_sigma
+                         * jax.random.normal(key, (cfg.n_slots,), dtype))
+    return gains
+
+
+def osa_mac(x_digits: jax.Array, w: jax.Array, cfg: OSAConfig = IDEAL_OSA,
+            key: jax.Array | None = None) -> jax.Array:
+    """One OSA accumulate: digits (n_slots, K) x weights (K,) -> scalar.
+
+    Bit-exact reference of Eq. (1): per-slot products are scaled by the slot
+    gain (the optical shift) and *then* summed across both slots and
+    wavelengths by a single photodetection event.
+    """
+    g = slot_gains(cfg, key, x_digits.dtype)
+    per_slot = x_digits @ w                      # (n_slots,) optical power/slot
+    return jnp.sum(g * per_slot)
+
+
+def osa_matmul_ref(x: jax.Array, w: jax.Array, cfg: OSAConfig = IDEAL_OSA,
+                   quant: Q.QuantConfig = Q.Q8,
+                   key: jax.Array | None = None) -> jax.Array:
+    """Full OSA matmul reference: float x (M,K) @ w (K,N) via the optical path.
+
+    Pipeline (exactly what the hardware does):
+      1. quantize x to `quant.bits` ints (the DAC feeding the EO modulators),
+      2. signed-digit/PAM decompose into time slots,
+      3. per-slot 'matmul' = the wavelength-parallel MRR weighting,
+      4. OSA shift-and-add across slots (slot gains = powers of two),
+      5. rescale by the quantization scale (done electronically after ADC).
+
+    With an ideal OSAConfig this equals fake-quant(x) @ w to float precision.
+    This function is the oracle for kernels/osa_matmul.
+    """
+    q, scale = Q.quantize(x, quant)
+    if cfg.pam_bits == 1:
+        digits = Q.decompose_planes(q, quant)          # (T, M, K)
+    else:
+        digits = Q.decompose_pam(q, cfg.pam_bits, quant)
+    g = slot_gains(dataclasses.replace(cfg, n_slots=digits.shape[0],
+                                       pam_bits=cfg.pam_bits), key, w.dtype)
+    per_slot = jnp.einsum("tmk,kn->tmn", digits.astype(w.dtype), w)
+    y = jnp.einsum("t,tmn->mn", g, per_slot)
+    return y * (scale / quant.qmax)
+
+
+def required_slot_count(quant: Q.QuantConfig, pam_bits: int = 1) -> int:
+    """Slots per input value: B-1 for ternary, ceil((B-1)/k) for PAM-k."""
+    return -(-quant.n_planes // pam_bits)
+
+
+def osa_latency_slots(n_values: int, quant: Q.QuantConfig = Q.Q8,
+                      pam_bits: int = 1) -> int:
+    """Bit-slot count to stream n_values inputs through one OSA chain."""
+    return n_values * required_slot_count(quant, pam_bits)

@@ -1,0 +1,134 @@
+"""Uniform quantization and signed-digit / PAM plane decomposition.
+
+The paper (Sec. 3.1) quantizes a normalized input x in (-1,1) into N_T
+balanced-ternary symbols b_t in {-1,0,1} such that
+
+    x = sum_t 2^(t-N_T) * b_t                       (Eq. 1-2)
+
+We realize the signed-digit stream as sign-magnitude binary: quantize to an
+integer q in [-(2^(B-1)-1), 2^(B-1)-1], split |q| into B-1 magnitude bits and
+multiply each by sign(q).  That satisfies b_t in {-1,0,1} exactly and is what
+the EO modulators transmit, slot t carrying significance 2^(t-N_T).
+
+PAM-k extends each slot to a radix-2^k digit (paper: "supports not only
+ternary coding, but also PAM with higher bitwidths"), shrinking the slot
+count from B-1 to ceil((B-1)/k) at the cost of 2^k amplitude levels.
+
+All functions are pure jnp, jit/vmap-safe, and exactly invertible —
+`compose_planes(decompose_planes(x)) == x` is a tested invariant.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantConfig:
+    bits: int = 8          # total bits incl. sign
+    symmetric: bool = True
+
+    @property
+    def qmax(self) -> int:
+        return 2 ** (self.bits - 1) - 1   # 127 for 8-bit
+
+    @property
+    def n_planes(self) -> int:
+        return self.bits - 1              # magnitude digits (sign rides on each)
+
+
+Q8 = QuantConfig(bits=8)
+
+
+def quantize(x: jax.Array, cfg: QuantConfig = Q8, scale: jax.Array | None = None):
+    """Symmetric uniform quantization -> (int values, scale).
+
+    scale is per-tensor absmax unless given.  Returned ints are float-typed
+    (TPU-friendly) in [-qmax, qmax].
+    """
+    if scale is None:
+        scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-8)
+    q = jnp.clip(jnp.round(x / scale * cfg.qmax), -cfg.qmax, cfg.qmax)
+    return q, scale
+
+
+def dequantize(q: jax.Array, scale: jax.Array, cfg: QuantConfig = Q8):
+    return q * (scale / cfg.qmax)
+
+
+def fake_quant(x: jax.Array, cfg: QuantConfig = Q8):
+    """Quantize-dequantize with straight-through gradient (QAT primitive)."""
+    q, scale = quantize(x, cfg)
+    xq = dequantize(q, scale, cfg)
+    return x + jax.lax.stop_gradient(xq - x)
+
+
+# --------------------------------------------------------------------------
+# Signed-digit plane (de)composition
+# --------------------------------------------------------------------------
+def decompose_planes(q: jax.Array, cfg: QuantConfig = Q8):
+    """Integer-valued tensor -> stacked signed bit-planes.
+
+    Args:
+      q: integer-valued array (any float/int dtype) in [-qmax, qmax].
+    Returns:
+      planes: shape (n_planes, *q.shape), values in {-1, 0, +1}; plane t
+        carries significance 2^t (t=0 is the LSB, matching Eq. 1's b_{k,0}).
+    """
+    sign = jnp.sign(q)
+    mag = jnp.abs(q).astype(jnp.int32)
+    planes = []
+    for t in range(cfg.n_planes):
+        bit = (mag >> t) & 1
+        planes.append(sign * bit.astype(q.dtype))
+    return jnp.stack(planes, axis=0)
+
+
+def plane_weights(cfg: QuantConfig = Q8, dtype=jnp.float32):
+    """Significance of each plane: 2^t for t = 0..n_planes-1.
+
+    The paper writes significance as 2^(t-N_T) on normalized x; we fold the
+    2^(-N_T) into the dequantization scale so planes stay integer-friendly.
+    """
+    return (2.0 ** jnp.arange(cfg.n_planes)).astype(dtype)
+
+
+def compose_planes(planes: jax.Array, cfg: QuantConfig = Q8):
+    """Inverse of decompose_planes: sum_t 2^t * plane_t (Eq. 2 inner sum)."""
+    w = plane_weights(cfg, planes.dtype).reshape((-1,) + (1,) * (planes.ndim - 1))
+    return jnp.sum(planes * w, axis=0)
+
+
+# --------------------------------------------------------------------------
+# PAM-k digit decomposition (radix 2^k)
+# --------------------------------------------------------------------------
+def decompose_pam(q: jax.Array, pam_bits: int, cfg: QuantConfig = Q8):
+    """Signed radix-2^pam_bits digits; slot count = ceil(n_planes/pam_bits).
+
+    digit_t in {-(2^k-1), ..., 2^k-1}; slot t has significance 2^(k*t).
+    pam_bits=1 degenerates to decompose_planes.
+    """
+    radix_bits = pam_bits
+    n_slots = -(-cfg.n_planes // radix_bits)
+    sign = jnp.sign(q)
+    mag = jnp.abs(q).astype(jnp.int32)
+    mask = (1 << radix_bits) - 1
+    digits = []
+    for t in range(n_slots):
+        d = (mag >> (radix_bits * t)) & mask
+        digits.append(sign * d.astype(q.dtype))
+    return jnp.stack(digits, axis=0)
+
+
+def pam_plane_weights(pam_bits: int, cfg: QuantConfig = Q8, dtype=jnp.float32):
+    n_slots = -(-cfg.n_planes // pam_bits)
+    return (2.0 ** (pam_bits * jnp.arange(n_slots))).astype(dtype)
+
+
+def compose_pam(digits: jax.Array, pam_bits: int, cfg: QuantConfig = Q8):
+    w = pam_plane_weights(pam_bits, cfg, digits.dtype)
+    w = w.reshape((-1,) + (1,) * (digits.ndim - 1))
+    return jnp.sum(digits * w, axis=0)

@@ -1,0 +1,2 @@
+from repro.data.tokens import TokenPipeline  # noqa
+from repro.data.synth_cifar import synth_cifar  # noqa

@@ -1,0 +1,2 @@
+"""Distribution layer: logical sharding rules, gradient compression,
+collective helpers, elastic/straggler policy hooks."""

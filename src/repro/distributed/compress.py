@@ -1,0 +1,38 @@
+"""Gradient compression: bf16 on the wire with f32 error feedback.
+
+The DP gradient all-reduce moves every gradient bf16 instead of f32 —
+halving the dominant cross-pod collective — while an f32 residual buffer
+accumulates the rounding error and re-injects it next step (error feedback
+keeps the *long-run* update unbiased; see Seide et al. 1-bit SGD lineage).
+
+Mechanically: the model's loss is differentiated normally; `compress` is
+applied to the gradient INSIDE the jitted train step *before* XLA's
+all-reduce (the cast makes XLA reduce in bf16), and `state` rides in the
+train state pytree, sharded like the params.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def init_error_state(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compress(grads, err_state):
+    """-> (bf16 grads for the reduce, new f32 error state)."""
+    def one(g, e):
+        g32 = g.astype(jnp.float32) + e
+        g16 = g32.astype(jnp.bfloat16)
+        return g16, g32 - g16.astype(jnp.float32)
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_e = treedef.flatten_up_to(err_state)
+    out = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    return (jax.tree.unflatten(treedef, [o[0] for o in out]),
+            jax.tree.unflatten(treedef, [o[1] for o in out]))
+
+
+def decompress(grads16):
+    return jax.tree.map(lambda g: g.astype(jnp.float32), grads16)

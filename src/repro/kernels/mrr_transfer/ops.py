@@ -1,0 +1,41 @@
+"""Jitted public wrapper for the MRR transfer kernel.
+
+Accepts arbitrary-shape weight tensors; flattens to 2-D, pads to block
+alignment, draws the noise operands from a PRNG key, dispatches to the
+Pallas kernel (interpret mode off-TPU).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import mrr
+from repro.kernels.mrr_transfer.mrr_transfer import mrr_transfer_pallas
+
+_LANE = 128
+
+
+@functools.partial(jax.jit, static_argnames=("sigma_dac", "sigma_th", "p"))
+def mrr_transfer(w_target: jax.Array, key: jax.Array,
+                 sigma_dac: float = 0.02, sigma_th: float = 0.04,
+                 p: mrr.MRRParams = mrr.DEFAULT_PARAMS) -> jax.Array:
+    """Noisy MRR realization of target weights, any shape, any size."""
+    shape = w_target.shape
+    flat = w_target.reshape(-1)
+    n = flat.shape[0]
+    block_rows = 8
+    per_row = _LANE
+    rows = -(-n // per_row)
+    rows_pad = -(-rows // block_rows) * block_rows
+    pad = rows_pad * per_row - n
+    flat = jnp.pad(flat, (0, pad)).reshape(rows_pad, per_row)
+    k1, k2 = jax.random.split(key)
+    e_dac = jax.random.normal(k1, flat.shape, flat.dtype)
+    e_th = jax.random.normal(k2, flat.shape, flat.dtype)
+    y = mrr_transfer_pallas(flat, e_dac, e_th, sigma_dac=sigma_dac,
+                            sigma_th=sigma_th, p=p, block_rows=block_rows,
+                            interpret=jax.default_backend() != "tpu")
+    return y.reshape(-1)[:n].reshape(shape)

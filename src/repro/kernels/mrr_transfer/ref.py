@@ -1,0 +1,31 @@
+"""Pure-jnp oracle for the MRR voltage->weight transfer kernel.
+
+Exactly core.mrr.realize_weights, but taking the two Gaussian noise draws as
+explicit operands so the kernel and oracle consume identical randomness.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import mrr
+
+
+def mrr_transfer_ref(w_target: jnp.ndarray,
+                     eps_dac: jnp.ndarray,
+                     eps_th: jnp.ndarray,
+                     sigma_dac: float = 0.02,
+                     sigma_th: float = 0.04,
+                     p: mrr.MRRParams = mrr.DEFAULT_PARAMS) -> jnp.ndarray:
+    """w_target -> programming voltage -> perturbed chain -> realized w.
+
+    eps_dac/eps_th: standard-normal draws, same shape as w_target.
+    """
+    v = mrr.voltage_of_weight(w_target, p)
+    v = jnp.clip(v, p.v_min, p.v_max)
+    v = v + sigma_dac * eps_dac
+    dt = mrr.delta_t(v, p) + sigma_th * eps_th
+    lam = p.lambda_0 + mrr.delta_lambda(dt, p)
+    td = mrr.t_diff(lam, p)
+    t_hi, t_lo = mrr.transmission_endpoints(p)
+    return p.q_min + p.q_rng * (td - t_lo) / (t_hi - t_lo)

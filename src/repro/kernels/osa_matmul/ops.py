@@ -1,0 +1,63 @@
+"""Jitted public wrapper around the OSA matmul kernel.
+
+Handles: quantization-scale plumbing, padding to MXU-aligned block multiples,
+CPU fallback (interpret mode), and default ideal slot gains.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quant as Q
+from repro.kernels.osa_matmul.osa_matmul import osa_matmul_pallas
+
+
+def _pad_to(x: jax.Array, mult: int, axis: int) -> jax.Array:
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("quant_bits", "pam_bits", "fused",
+                                             "bm", "bn", "bk"))
+def osa_matmul(x: jax.Array, w: jax.Array, gains: jax.Array | None = None,
+               *, quant_bits: int = 8, pam_bits: int = 1, fused: bool = True,
+               bm: int = 128, bn: int = 128, bk: int = 128) -> jax.Array:
+    """Float activations -> quantize -> OSA kernel -> dequantized output.
+
+    x: (M, K) float; w: (K, N) float; returns (M, N) f32.
+    pam_bits > 1 shrinks the slot count (PAM-2^k digits, paper Sec. 3.1).
+    """
+    cfg = Q.QuantConfig(bits=quant_bits)
+    q, scale = Q.quantize(x, cfg)
+    n_planes = -(-cfg.n_planes // pam_bits)
+    if gains is None:
+        gains = (Q.plane_weights(cfg) if pam_bits == 1
+                 else Q.pam_plane_weights(pam_bits, cfg))
+    y = osa_matmul_int(q, w, gains, n_planes=n_planes, fused=fused,
+                       bm=bm, bn=bn, bk=bk)
+    return y * (scale / cfg.qmax)
+
+
+def osa_matmul_int(q: jax.Array, w: jax.Array, gains: jax.Array,
+                   *, n_planes: int, fused: bool = True,
+                   bm: int = 128, bn: int = 128, bk: int = 128) -> jax.Array:
+    """Integer-activation entry point (the kernel's native contract)."""
+    m, k = q.shape
+    _, n = w.shape
+    qp = _pad_to(_pad_to(q.astype(jnp.float32), bm, 0), bk, 1)
+    wp = _pad_to(_pad_to(w.astype(jnp.float32), bk, 0), bn, 1)
+    y = osa_matmul_pallas(qp, wp, gains.astype(jnp.float32),
+                          n_planes=n_planes, fused=fused, bm=bm, bn=bn, bk=bk,
+                          interpret=not _on_tpu())
+    return y[:m, :n]

@@ -1,0 +1,36 @@
+"""Pure-jnp oracle for the OSA bit-serial signed-digit matmul kernel.
+
+Semantics (matching core.osa.osa_matmul_ref but taking pre-quantized integer
+activations, which is the kernel's contract):
+
+    y[m, n] = sum_t gains[t] * sum_k plane_t(q)[m, k] * w[k, n]
+
+where plane_t(q) = sign(q) * ((|q| >> t) & 1) are the signed digit planes of
+the integer activations q (values in [-(2^(B-1)-1), 2^(B-1)-1]) and
+gains[t] defaults to the ideal power-of-two ladder 2^t (the optical
+shift realized by the splitter/ODL chain).  With ideal gains this equals
+q.astype(f32) @ w exactly.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import quant as Q
+
+
+def osa_matmul_ref(q: jnp.ndarray, w: jnp.ndarray,
+                   gains: jnp.ndarray | None = None,
+                   quant_bits: int = 8,
+                   pam_bits: int = 1) -> jnp.ndarray:
+    """q: (M, K) integer-valued; w: (K, N) f32; gains: (T,) or None."""
+    cfg = Q.QuantConfig(bits=quant_bits)
+    qf = q.astype(jnp.float32)
+    if pam_bits == 1:
+        planes = Q.decompose_planes(qf, cfg)                 # (T, M, K)
+        g = Q.plane_weights(cfg) if gains is None else gains
+    else:
+        planes = Q.decompose_pam(qf, pam_bits, cfg)
+        g = Q.pam_plane_weights(pam_bits, cfg) if gains is None else gains
+    per_slot = jnp.einsum("tmk,kn->tmn", planes, w.astype(jnp.float32))
+    return jnp.einsum("t,tmn->mn", g.astype(jnp.float32), per_slot)

@@ -1,0 +1,50 @@
+"""Jitted public wrapper for the SSD scan kernel.
+
+Shapes in model-land are (B, L, H, P) with per-head state (B, H, S, P); this
+wrapper folds (B, H) -> BH, pads L to the chunk multiple with identity steps
+(log a = 0, b = c = 0 contribute nothing and leave the state untouched), and
+falls back to interpret mode off-TPU.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssd_scan.ssd_scan import ssd_scan_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def ssd_scan(x: jax.Array, loga: jax.Array, b: jax.Array, c: jax.Array,
+             chunk: int = 128):
+    """x: (B, L, H, P); loga: (B, L, H); b, c: (B, L, G, S) with G head
+    groups (G divides H, heads within a group share B/C — Mamba-2's GVA).
+
+    Returns (y: (B, L, H, P), state: (B, H, S, P)).
+    """
+    bsz, l, h, p = x.shape
+    g = b.shape[2]
+    s_dim = b.shape[-1]
+    rep = h // g
+
+    # broadcast groups to heads, fold (B, H) -> BH
+    bh = bsz * h
+    xf = x.transpose(0, 2, 1, 3).reshape(bh, l, p)
+    lf = loga.transpose(0, 2, 1).reshape(bh, l)
+    bf = jnp.repeat(b, rep, axis=2).transpose(0, 2, 1, 3).reshape(bh, l, s_dim)
+    cf = jnp.repeat(c, rep, axis=2).transpose(0, 2, 1, 3).reshape(bh, l, s_dim)
+
+    pad = (-l) % chunk
+    if pad:
+        xf = jnp.pad(xf, ((0, 0), (0, pad), (0, 0)))
+        lf = jnp.pad(lf, ((0, 0), (0, pad)))          # log a = 0 -> a = 1
+        bf = jnp.pad(bf, ((0, 0), (0, pad), (0, 0)))  # b = 0 -> no state write
+        cf = jnp.pad(cf, ((0, 0), (0, pad), (0, 0)))
+
+    y, sf = ssd_scan_pallas(xf, lf, bf, cf, chunk=chunk,
+                            interpret=jax.default_backend() != "tpu")
+    y = y[:, :l].reshape(bsz, h, l, p).transpose(0, 2, 1, 3)
+    sf = sf.reshape(bsz, h, s_dim, p)
+    return y, sf

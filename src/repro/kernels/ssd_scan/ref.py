@@ -1,0 +1,80 @@
+"""Pure-jnp oracle for the Mamba-2 SSD chunked scan kernel.
+
+State-space duality (SSD) recurrence, per (batch, head):
+
+    S_t = a_t * S_{t-1} + b_t x_t^T          S in R^{d_state x d_head}
+    y_t = c_t @ S_t                          y in R^{d_head}
+
+with a_t = exp(A * dt_t) in (0, 1] the scalar per-step decay, b_t, c_t in
+R^{d_state}, x_t in R^{d_head}.  This sequential lax.scan is the ground
+truth; the kernel computes the chunked matmul form (intra-chunk masked
+attention + inter-chunk state carry) which is algebraically identical.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_scan_ref(x: jax.Array, a: jax.Array, b: jax.Array,
+                 c: jax.Array, s0: jax.Array | None = None):
+    """Sequential oracle.
+
+    x: (L, P) inputs;  a: (L,) decays in (0,1];  b, c: (L, S) in/out
+    projections; s0: (S, P) initial state.  Returns (y: (L, P), s_f: (S, P)).
+    """
+    l, p = x.shape
+    s_dim = b.shape[-1]
+    if s0 is None:
+        s0 = jnp.zeros((s_dim, p), x.dtype)
+
+    def step(s, inp):
+        xt, at, bt, ct = inp
+        s = at * s + bt[:, None] * xt[None, :]
+        y = ct @ s
+        return s, y
+
+    s_f, y = jax.lax.scan(step, s0, (x, a, b, c))
+    return y, s_f
+
+
+def ssd_scan_chunked_ref(x, a, b, c, chunk: int, s0=None):
+    """Chunked matmul formulation (what the kernel implements), pure jnp.
+
+    Within a chunk of length Q (log-decay prefix sums l_i = sum_{j<=i} log a_j):
+      intra:  Y[i] += sum_{j<=i} (c_i . b_j) * exp(l_i - l_j) * x_j
+      inter:  Y[i] += exp(l_i) * c_i @ S_in
+      carry:  S_out = exp(l_Q) * S_in + sum_j exp(l_Q - l_j) * b_j x_j^T
+    """
+    l, p = x.shape
+    s_dim = b.shape[-1]
+    assert l % chunk == 0
+    n_chunks = l // chunk
+    if s0 is None:
+        s0 = jnp.zeros((s_dim, p), jnp.float32)
+
+    xs = x.reshape(n_chunks, chunk, p).astype(jnp.float32)
+    as_ = a.reshape(n_chunks, chunk).astype(jnp.float32)
+    bs = b.reshape(n_chunks, chunk, s_dim).astype(jnp.float32)
+    cs = c.reshape(n_chunks, chunk, s_dim).astype(jnp.float32)
+
+    def chunk_step(s, inp):
+        xq, aq, bq, cq = inp
+        loga = jnp.log(aq)
+        lcum = jnp.cumsum(loga)                        # l_i (inclusive)
+        ltot = lcum[-1]
+        # intra-chunk masked kernel: decay(i, j) = exp(l_i - l_j) for j <= i
+        dmat = jnp.exp(lcum[:, None] - lcum[None, :])
+        mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+        att = (cq @ bq.T) * jnp.where(mask, dmat, 0.0)
+        y = att @ xq
+        # inter-chunk contribution from the incoming state
+        y = y + jnp.exp(lcum)[:, None] * (cq @ s)
+        # state carry
+        w = jnp.exp(ltot - lcum)                       # per-step carry weight
+        s_new = jnp.exp(ltot) * s + (bq * w[:, None]).T @ xq
+        return s_new, y
+
+    s_f, ys = jax.lax.scan(chunk_step, s0, (xs, as_, bs, cs))
+    return ys.reshape(l, p), s_f

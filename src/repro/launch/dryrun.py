@@ -1,0 +1,183 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"  # noqa: E402  (MUST precede any jax import)
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this driver:
+  1. builds the production mesh (16,16)=256 chips or (2,16,16)=512 chips,
+  2. resolves parameter / optimizer / batch / cache shardings from the
+     logical rules (train vs serve),
+  3. jits the right step (train_step / prefill / decode_step),
+     .lower()s it with ShapeDtypeStruct inputs (no allocation), .compile()s,
+  4. records memory_analysis(), cost_analysis() and the trip-count-aware
+     HLO analysis (launch/hlo_analysis.py) to a JSON file per cell.
+
+Failures here (sharding mismatch, OOM at compile, unsupported collective)
+are bugs in the system — the roofline reporter refuses to run on a cell
+without a green dry-run record.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-32b --shape train_4k --mesh multi
+  python -m repro.launch.dryrun --all --mesh both --out results/dryrun
+"""
+
+import argparse  # noqa: E402
+import dataclasses  # noqa: E402
+import json  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+
+import jax  # noqa: E402
+
+from repro.configs import ARCH_IDS, get_config  # noqa: E402
+from repro.distributed.sharding import (SERVE_RULES, TRAIN_RULES,  # noqa: E402
+                                        ZERO3_TRAIN_RULES, param_shardings,
+                                        tree_shardings, use_sharding)
+from repro.launch import hlo_analysis  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.launch.steps import (init_opt_state, make_train_step,  # noqa: E402
+                                opt_state_shardings)
+from repro.models.model import (ASSIGNED_SHAPES, ModelBundle,  # noqa: E402
+                                applicable, build_model)
+from repro.optim import AdamWConfig  # noqa: E402
+
+
+def _mem_dict(ma) -> dict:
+    if ma is None:
+        return {}
+    fields = ("generated_code_size_in_bytes", "argument_size_in_bytes",
+              "output_size_in_bytes", "alias_size_in_bytes",
+              "temp_size_in_bytes")
+    return {f: getattr(ma, f, None) for f in fields}
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str,
+             backend: str = "dense", overrides: dict | None = None,
+             save_hlo: str | None = None) -> dict:
+    """Lower+compile one cell; returns the JSON-able record."""
+    cfg = get_config(arch)
+    compress = False
+    if overrides:
+        overrides = dict(overrides)
+        compress = overrides.pop("grad_compress", False)
+        cap = overrides.pop("capacity_factor", None)
+        cfg = dataclasses.replace(cfg, **overrides)
+        if cap is not None and cfg.moe is not None:
+            cfg = dataclasses.replace(
+                cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=cap))
+    shape = ASSIGNED_SHAPES[shape_name]
+    ok, why = applicable(cfg, shape)
+    rec = {"arch": cfg.name, "shape": shape_name, "mesh": mesh_kind,
+           "backend": backend, "status": "skip", "reason": why}
+    if not ok:
+        return rec
+
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    if shape.kind != "train":
+        rules = SERVE_RULES
+    elif cfg.parallelism == "zero3":
+        rules = ZERO3_TRAIN_RULES
+    else:
+        rules = TRAIN_RULES
+    bundle = build_model(cfg)
+    t0 = time.time()
+
+    with use_sharding(mesh, rules):
+        params_abs = bundle.abstract()
+        p_sh = param_shardings(bundle.skeleton, mesh, rules)
+        batch_abs, batch_axes = bundle.input_specs(shape)
+        b_sh = tree_shardings(batch_abs, batch_axes, mesh, rules)
+
+        if shape.kind == "train":
+            opt_abs = jax.eval_shape(
+                lambda p: init_opt_state(p, compress), params_abs)
+            o_sh = opt_state_shardings(p_sh, compress)
+            step = make_train_step(bundle, AdamWConfig(),
+                                   grad_compress=compress)
+            jitted = jax.jit(step, in_shardings=(p_sh, o_sh, b_sh),
+                             donate_argnums=(0, 1))
+            lowered = jitted.lower(params_abs, opt_abs, batch_abs)
+        elif shape.kind == "prefill":
+            jitted = jax.jit(bundle.prefill, in_shardings=(p_sh, b_sh))
+            lowered = jitted.lower(params_abs, batch_abs)
+        else:
+            jitted = jax.jit(bundle.decode_step, in_shardings=(p_sh, b_sh),
+                             donate_argnums=(1,))
+            lowered = jitted.lower(params_abs, batch_abs)
+
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    ma = compiled.memory_analysis()
+    ca = compiled.cost_analysis() or {}
+    hlo = compiled.as_text()
+    rep = hlo_analysis.analyze(hlo)
+    if save_hlo:
+        with open(save_hlo, "w") as f:
+            f.write(hlo)
+
+    rec.update(
+        status="ok",
+        n_devices=mesh.devices.size,
+        n_params=bundle.n_params,
+        lower_s=round(t_lower, 1), compile_s=round(t_compile, 1),
+        memory=_mem_dict(ma),
+        xla_cost={"flops_single_visit": ca.get("flops"),
+                  "bytes_single_visit": ca.get("bytes accessed")},
+        hlo=rep.as_dict(),
+    )
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None,
+                    choices=list(ASSIGNED_SHAPES) + [None])
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--backend", default="dense")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--override", default=None,
+                    help="JSON dict of ModelConfig field overrides")
+    ap.add_argument("--save-hlo", default=None)
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    archs = list(ARCH_IDS) if args.all or not args.arch else [args.arch]
+    shapes = list(ASSIGNED_SHAPES) if args.all or not args.shape \
+        else [args.shape]
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    overrides = json.loads(args.override) if args.override else None
+
+    n_fail = 0
+    for arch in archs:
+        for shape in shapes:
+            for mesh_kind in meshes:
+                tag = f"{arch}__{shape}__{mesh_kind}"
+                if overrides:
+                    tag += "__opt"
+                try:
+                    rec = run_cell(arch, shape, mesh_kind, args.backend,
+                                   overrides, save_hlo=args.save_hlo)
+                except Exception as e:  # noqa: BLE001 — record and continue
+                    traceback.print_exc()
+                    rec = {"arch": arch, "shape": shape, "mesh": mesh_kind,
+                           "status": "fail", "error": f"{type(e).__name__}: {e}"}
+                    n_fail += 1
+                path = os.path.join(args.out, tag + ".json")
+                with open(path, "w") as f:
+                    json.dump(rec, f, indent=1)
+                mem = rec.get("memory", {}).get("argument_size_in_bytes")
+                print(f"[{rec['status']:4s}] {tag} "
+                      f"args/dev={mem if mem else '-'} "
+                      f"flops/dev={rec.get('hlo', {}).get('flops', '-'):} "
+                      f"({rec.get('reason', '')})", flush=True)
+    if n_fail:
+        raise SystemExit(f"{n_fail} cells failed")
+
+
+if __name__ == "__main__":
+    main()

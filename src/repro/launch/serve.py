@@ -1,0 +1,73 @@
+"""Batched serving driver: prefill a batch of prompts, decode N tokens.
+
+Demonstrates the serving path end-to-end on real devices (CPU here):
+prefill -> padded KV cache -> jitted decode loop with donated cache.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch gemma3-12b --smoke \
+      --batch 4 --prompt-len 32 --gen 16
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, get_smoke
+from repro.models.model import build_model, pad_cache
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma3-12b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    args = ap.parse_args()
+
+    cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
+    bundle = build_model(cfg)
+    key = jax.random.PRNGKey(0)
+    params = bundle.init(key)
+    print(f"arch={cfg.name} params={bundle.n_params:,}")
+
+    b, s = args.batch, args.prompt_len
+    prompt = jax.random.randint(key, (b, s), 0, cfg.vocab, dtype=jnp.int32)
+    batch = {"tokens": prompt}
+    if cfg.frontend == "vision":
+        batch["patch_embeds"] = jnp.zeros((b, 16, cfg.d_model), jnp.bfloat16)
+    if cfg.frontend == "audio":
+        batch["src_embeds"] = jax.random.normal(
+            key, (b, s, cfg.d_model), jnp.float32).astype(jnp.bfloat16)
+
+    t0 = time.time()
+    logits, cache = jax.jit(bundle.prefill)(params, batch)
+    cache = pad_cache(cfg, cache, args.gen + 1)
+    print(f"prefill {b}x{s}: {time.time() - t0:.2f}s")
+
+    decode = jax.jit(bundle.decode_step, donate_argnums=())
+    tok = jnp.argmax(logits, -1)
+    out = [tok]
+    t0 = time.time()
+    for i in range(args.gen - 1):
+        logits, cache = decode(params, {"token": tok, "pos": cache["pos"],
+                                        "cache": cache})
+        if args.temperature > 0:
+            key, sub = jax.random.split(key)
+            tok = jax.random.categorical(sub, logits / args.temperature, -1)
+        else:
+            tok = jnp.argmax(logits, -1)
+        out.append(tok)
+    dt = time.time() - t0
+    toks = jnp.stack(out, 1)
+    print(f"decoded {args.gen} tokens x {b} seqs in {dt:.2f}s "
+          f"({b * args.gen / max(dt, 1e-9):.1f} tok/s)")
+    print("sample token ids:", toks[0, :12].tolist())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,142 @@
+"""End-to-end LM training driver (deliverable b's main example).
+
+Runs real optimization steps on whatever devices exist (CPU in this
+container, TPU pod in production — same code path):
+
+  * builds the model from an arch config (full or --smoke reduced),
+  * shards params/opt-state/batch via the logical rules if >1 device,
+  * deterministic TokenPipeline (step -> batch; elastic restart-safe),
+  * AdamW + cosine schedule + grad clip (+ optional bf16 compression),
+  * atomic keep-K checkpointing with resume (--resume),
+  * straggler/fault policy: the data pipeline is stateless so any step can
+    be re-issued; SIGTERM-safe checkpoint on exit.
+
+Example (CPU, ~100M-param model, a few hundred steps):
+  PYTHONPATH=src python -m repro.launch.train --arch qwen3-32b --smoke \
+      --d-model 512 --n-layers 8 --steps 300 --batch 8 --seq 256
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import CheckpointManager, restore
+from repro.configs import get_config, get_smoke
+from repro.data import TokenPipeline
+from repro.distributed.sharding import (TRAIN_RULES, param_shardings,
+                                        tree_shardings, use_sharding)
+from repro.launch.mesh import make_test_mesh
+from repro.launch.steps import (init_opt_state, make_train_step,
+                                opt_state_shardings)
+from repro.models.model import ShapeSpec, build_model, make_inputs
+from repro.optim import AdamWConfig, cosine_schedule
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-32b")
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced config for this arch")
+    ap.add_argument("--d-model", type=int, default=0)
+    ap.add_argument("--n-layers", type=int, default=0)
+    ap.add_argument("--d-ff", type=int, default=0)
+    ap.add_argument("--vocab", type=int, default=0)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--warmup", type=int, default=20)
+    ap.add_argument("--ckpt-dir", default="results/ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=100)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--compress-grads", action="store_true")
+    ap.add_argument("--data-axis", type=int, default=0,
+                    help="data-parallel ways (0 = all devices)")
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args()
+
+    cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
+    if args.d_model:
+        cfg = dataclasses.replace(cfg, d_model=args.d_model)
+    if args.n_layers:
+        cfg = dataclasses.replace(cfg, n_layers=args.n_layers)
+    if args.d_ff:
+        cfg = dataclasses.replace(cfg, d_ff=args.d_ff)
+    if args.vocab:
+        cfg = dataclasses.replace(cfg, vocab=args.vocab)
+    bundle = build_model(cfg)
+    print(f"arch={cfg.name} params={bundle.n_params:,}")
+
+    n_dev = len(jax.devices())
+    dp = args.data_axis or n_dev
+    mesh = make_test_mesh(data=dp, model=n_dev // dp) if n_dev > 1 else None
+
+    key = jax.random.PRNGKey(0)
+    opt_cfg = AdamWConfig(lr=cosine_schedule(args.lr, args.warmup,
+                                             args.steps))
+    step_fn = make_train_step(bundle, opt_cfg,
+                              grad_compress=args.compress_grads)
+
+    pipe = TokenPipeline(vocab=cfg.vocab, seq_len=args.seq,
+                         global_batch=args.batch)
+    shape = ShapeSpec("cli", "train", args.seq, args.batch)
+
+    ckpt = CheckpointManager(args.ckpt_dir, every=args.ckpt_every, keep=3)
+    start = 0
+
+    if mesh is not None:
+        rules = TRAIN_RULES
+        with use_sharding(mesh, rules):
+            p_sh = param_shardings(bundle.skeleton, mesh, rules)
+            params = jax.jit(bundle.init, out_shardings=p_sh)(key)
+            o_sh = opt_state_shardings(p_sh, args.compress_grads)
+            opt = jax.jit(
+                lambda p: init_opt_state(p, args.compress_grads),
+                out_shardings=o_sh)(params)
+            _, batch_axes = make_inputs(cfg, shape)
+            b_sh = tree_shardings(
+                jax.eval_shape(lambda: pipe.batch(0)), batch_axes, mesh,
+                rules)
+            jit_step = jax.jit(step_fn, in_shardings=(p_sh, o_sh, b_sh),
+                               donate_argnums=(0, 1))
+    else:
+        params = bundle.init(key)
+        opt = init_opt_state(params, args.compress_grads)
+        jit_step = jax.jit(step_fn, donate_argnums=(0, 1))
+
+    if args.resume and ckpt.latest() is not None:
+        start = ckpt.latest()
+        state = restore(args.ckpt_dir, start,
+                        {"params": params, "opt": opt})
+        params, opt = state["params"], state["opt"]
+        print(f"resumed from step {start}")
+
+    ctx = use_sharding(mesh, TRAIN_RULES) if mesh is not None else None
+    if ctx:
+        ctx.__enter__()
+    t0 = time.time()
+    try:
+        for step in range(start, args.steps):
+            batch = pipe.batch(step)
+            params, opt, metrics = jit_step(params, opt, batch)
+            if step % args.log_every == 0 or step == args.steps - 1:
+                loss = float(metrics["loss"])
+                gn = float(metrics["grad_norm"])
+                dt = time.time() - t0
+                print(f"step {step:5d}  loss {loss:7.4f}  |g| {gn:8.3f}  "
+                      f"{dt:6.1f}s", flush=True)
+            ckpt.maybe_save(step + 1, {"params": params, "opt": opt},
+                            meta={"arch": cfg.name})
+    finally:
+        if ctx:
+            ctx.__exit__(None, None, None)
+    print(f"done: {args.steps - start} steps in {time.time() - t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

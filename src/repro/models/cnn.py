@@ -1,0 +1,203 @@
+"""Reduced CNN families for the paper's behavioural experiments.
+
+AlexNet / VGG16 / ResNet18 / MobileNetV3 at CIFAR scale, every conv/fc
+lowered to im2col + matmul so the contraction can route through the ROSA
+optical backend (core.onn_linear.rosa_matmul) with a PER-LAYER execution
+config — exactly the knob the paper's hybrid mapping turns.  Widths are
+reduced (documented in DESIGN.md §8) so QAT runs in minutes on one CPU
+core; layer NAMES match configs/paper_cnns.py so behavioural noise
+profiles join against the full-size EDP table rows.
+
+API:
+    specs = LITE_MODELS["alexnet"]
+    skel  = cnn_def(specs)
+    logits = cnn_apply(params, specs, images, layer_cfgs={name: RosaConfig})
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.onn_linear import RosaConfig, rosa_matmul
+from repro.models.module import ParamDef
+
+
+@dataclasses.dataclass(frozen=True)
+class ConvSpec:
+    name: str
+    kind: str              # conv | dwconv | fc
+    c_in: int
+    c_out: int
+    k: int = 3
+    stride: int = 1
+    pool: int = 1          # avg-pool factor applied after activation
+    act: bool = True
+
+
+def _im2col(x: jax.Array, k: int, stride: int) -> jax.Array:
+    """x: (B, H, W, C) -> (B, H', W', C*k*k) patches (SAME padding)."""
+    b, h, w, c = x.shape
+    patches = jax.lax.conv_general_dilated_patches(
+        x, (k, k), (stride, stride), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return patches
+
+
+def cnn_def(specs: list[ConvSpec], n_classes: int = 10) -> dict:
+    p: dict = {}
+    for s in specs:
+        if s.kind == "fc":
+            p[s.name] = {"w": ParamDef((s.c_in, s.c_out), (None, None)),
+                         "b": ParamDef((s.c_out,), (None,), "zeros")}
+        elif s.kind == "dwconv":
+            p[s.name] = {"w": ParamDef((s.c_in, s.k * s.k), (None, None)),
+                         "b": ParamDef((s.c_in,), (None,), "zeros")}
+        else:
+            p[s.name] = {"w": ParamDef((s.c_in * s.k * s.k, s.c_out),
+                                       (None, None)),
+                         "b": ParamDef((s.c_out,), (None,), "zeros")}
+    return p
+
+
+def _contract(x2: jax.Array, w: jax.Array, cfg: RosaConfig | None,
+              key) -> jax.Array:
+    if cfg is None:
+        return x2 @ w
+    return rosa_matmul(x2, w, cfg, key)
+
+
+def cnn_apply(params: dict, specs: list[ConvSpec], x: jax.Array,
+              layer_cfgs: dict[str, RosaConfig] | None = None,
+              key: jax.Array | None = None,
+              residual_from: dict[str, str] | None = None) -> jax.Array:
+    """Forward; x: (B, 32, 32, 3) -> logits (B, n_classes).
+
+    layer_cfgs maps layer name -> RosaConfig (None/missing = exact dense).
+    residual_from: {layer_name: earlier_layer_name} adds skip connections
+    (ResNet family); spatial dims must match.
+    """
+    layer_cfgs = layer_cfgs or {}
+    saved: dict[str, jax.Array] = {}
+    keys = {}
+    if key is not None:
+        ks = jax.random.split(key, len(specs))
+        keys = {s.name: ks[i] for i, s in enumerate(specs)}
+
+    for s in specs:
+        p = params[s.name]
+        cfg = layer_cfgs.get(s.name)
+        k_l = keys.get(s.name)
+        if s.kind == "fc":
+            if x.ndim > 2:
+                x = jnp.mean(x, axis=(1, 2)) if x.shape[1] > 1 \
+                    else x.reshape(x.shape[0], -1)
+            y = _contract(x, p["w"], cfg, k_l) + p["b"]
+        elif s.kind == "dwconv":
+            patches = _im2col(x, s.k, s.stride)
+            b, h, w_, _ = patches.shape
+            pr = patches.reshape(b, h, w_, s.c_in, s.k * s.k)
+            # per-channel contraction; noise semantics follow the cfg but
+            # the contraction is einsum (C tiny independent sub-GEMMs)
+            w_eff = p["w"]
+            if cfg is not None and not cfg.noise.is_ideal:
+                from repro.core import mrr
+                from repro.core.quant import fake_quant
+                scale = jnp.maximum(jnp.max(jnp.abs(w_eff)), 1e-8)
+                wq = fake_quant(w_eff / scale, cfg.qcfg)
+                w_eff = mrr.realize_weights(wq, k_l, cfg.mrr_params,
+                                            cfg.noise) * scale
+            y = jnp.einsum("bhwck,ck->bhwc", pr, w_eff) + p["b"]
+        else:
+            patches = _im2col(x, s.k, s.stride)
+            b, h, w_, kk = patches.shape
+            y = _contract(patches.reshape(-1, kk), p["w"], cfg, k_l)
+            y = y.reshape(b, h, w_, s.c_out) + p["b"]
+        if residual_from and s.name in residual_from:
+            y = y + saved[residual_from[s.name]]
+        if s.act:
+            y = jax.nn.relu(y)
+        if s.pool > 1 and y.ndim == 4:
+            b, h, w_, c = y.shape
+            y = y.reshape(b, h // s.pool, s.pool, w_ // s.pool, s.pool, c
+                          ).mean(axis=(2, 4))
+        saved[s.name] = y
+        x = y
+    return x
+
+
+# ---------------------------------------------------------------------------
+# Reduced model zoo (names match configs/paper_cnns.py rows)
+# ---------------------------------------------------------------------------
+ALEXNET_LITE = [
+    ConvSpec("conv1", "conv", 3, 24, pool=2),
+    ConvSpec("conv2", "conv", 24, 48, pool=2),
+    ConvSpec("conv3", "conv", 48, 64),
+    ConvSpec("conv4", "conv", 64, 64),
+    ConvSpec("conv5", "conv", 64, 48, pool=2),
+    ConvSpec("fc1", "fc", 48, 128),
+    ConvSpec("fc2", "fc", 128, 128),
+    ConvSpec("fc3", "fc", 128, 10, act=False),
+]
+
+VGG16_LITE = [
+    ConvSpec("conv1_1", "conv", 3, 16), ConvSpec("conv1_2", "conv", 16, 16, pool=2),
+    ConvSpec("conv2_1", "conv", 16, 32), ConvSpec("conv2_2", "conv", 32, 32, pool=2),
+    ConvSpec("conv3_1", "conv", 32, 48), ConvSpec("conv3_2", "conv", 48, 48),
+    ConvSpec("conv3_3", "conv", 48, 48, pool=2),
+    ConvSpec("conv4_1", "conv", 48, 64), ConvSpec("conv4_2", "conv", 64, 64),
+    ConvSpec("conv4_3", "conv", 64, 64, pool=2),
+    ConvSpec("conv5_1", "conv", 64, 64), ConvSpec("conv5_2", "conv", 64, 64),
+    ConvSpec("conv5_3", "conv", 64, 64, pool=2),
+    ConvSpec("fc1", "fc", 64, 96), ConvSpec("fc2", "fc", 96, 96),
+    ConvSpec("fc3", "fc", 96, 10, act=False),
+]
+
+RESNET18_LITE = [
+    ConvSpec("conv1", "conv", 3, 24),
+    ConvSpec("l1_b1_c1", "conv", 24, 24), ConvSpec("l1_b1_c2", "conv", 24, 24),
+    ConvSpec("l1_b2_c1", "conv", 24, 24), ConvSpec("l1_b2_c2", "conv", 24, 24),
+    ConvSpec("l2_b1_c1", "conv", 24, 48, stride=2),
+    ConvSpec("l2_b1_c2", "conv", 48, 48),
+    ConvSpec("l2_b2_c1", "conv", 48, 48), ConvSpec("l2_b2_c2", "conv", 48, 48),
+    ConvSpec("l3_b1_c1", "conv", 48, 64, stride=2),
+    ConvSpec("l3_b1_c2", "conv", 64, 64),
+    ConvSpec("l3_b2_c1", "conv", 64, 64), ConvSpec("l3_b2_c2", "conv", 64, 64),
+    ConvSpec("l4_b1_c1", "conv", 64, 96, stride=2),
+    ConvSpec("l4_b1_c2", "conv", 96, 96),
+    ConvSpec("l4_b2_c1", "conv", 96, 96), ConvSpec("l4_b2_c2", "conv", 96, 96),
+    ConvSpec("fc", "fc", 96, 10, act=False),
+]
+RESNET18_SKIPS = {"l1_b1_c2": "conv1", "l1_b2_c2": "l1_b1_c2",
+                  "l2_b1_c2": None, "l2_b2_c2": "l2_b1_c2",
+                  "l3_b2_c2": "l3_b1_c2", "l4_b2_c2": "l4_b1_c2"}
+RESNET18_SKIPS = {k: v for k, v in RESNET18_SKIPS.items() if v}
+
+MOBILENET_V3_LITE = (
+    [ConvSpec("conv_stem", "conv", 3, 16, pool=2)]
+    + [ConvSpec("mb1_exp", "conv", 16, 16, k=1),
+       ConvSpec("mb1_dw", "dwconv", 16, 16),
+       ConvSpec("mb1_prj", "conv", 16, 16, k=1, act=False)]
+    + [ConvSpec("mb2_exp", "conv", 16, 36, k=1),
+       ConvSpec("mb2_dw", "dwconv", 36, 36, pool=2),
+       ConvSpec("mb2_prj", "conv", 36, 24, k=1, act=False)]
+    + [ConvSpec("mb4_exp", "conv", 24, 48, k=1),
+       ConvSpec("mb4_dw", "dwconv", 48, 48, k=5, pool=2),
+       ConvSpec("mb4_prj", "conv", 48, 40, k=1, act=False)]
+    + [ConvSpec("mb6_exp", "conv", 40, 60, k=1),
+       ConvSpec("mb6_dw", "dwconv", 60, 60, k=5),
+       ConvSpec("mb6_prj", "conv", 60, 48, k=1, act=False)]
+    + [ConvSpec("head", "fc", 48, 96), ConvSpec("fc", "fc", 96, 10,
+                                                act=False)]
+)
+
+LITE_MODELS: dict[str, list[ConvSpec]] = {
+    "alexnet": ALEXNET_LITE,
+    "vgg16": VGG16_LITE,
+    "resnet18": RESNET18_LITE,
+    "mobilenet_v3": MOBILENET_V3_LITE,
+}
+LITE_SKIPS: dict[str, dict] = {"resnet18": RESNET18_SKIPS}

@@ -1,0 +1,137 @@
+"""Multi-head Latent Attention (DeepSeek-V2, arXiv:2405.04434).
+
+Queries and keys/values are low-rank compressed:
+
+    c_q  = W_dq  h            (q_lora)             -> q = W_uq norm(c_q)
+    c_kv = W_dkv h            (kv_lora)            -> k_nope = W_uk norm(c_kv)
+    k_rope = RoPE(W_kr h)     (qk_rope, per-token, shared across heads)
+    v    = W_uv norm(c_kv)
+
+Per-head dims: qk = qk_nope + qk_rope for scores, v_head for values.
+
+The decode path caches ONLY (c_kv, k_rope) — kv_lora + qk_rope floats per
+token (576 for the paper config vs 2*128*128 = 32768 for vanilla MHA) — and
+*absorbs* W_uk / W_uv into the query/output projections so scores are taken
+directly against the compressed cache:
+
+    score  = (q_nope W_uk) . c_kv + q_rope . k_rope
+    out    = (sum_j p_j c_kv_j) W_uv
+
+This is the paper's inference trick and is what makes deepseek-v2's
+decode_32k cell cache-light in the dry-run.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import rmsnorm, rmsnorm_def, rope, _mask_bias
+from repro.models.module import ParamDef
+
+
+@dataclasses.dataclass(frozen=True)
+class MLAConfig:
+    d_model: int
+    n_heads: int
+    q_lora: int = 1536
+    kv_lora: int = 512
+    qk_nope: int = 128
+    qk_rope: int = 64
+    v_head: int = 128
+    rope_theta: float = 1e4
+    uniform_decode: bool = True    # see layers.AttnConfig.uniform_decode
+
+    @property
+    def cache_width(self) -> int:
+        return self.kv_lora + self.qk_rope
+
+
+def mla_def(cfg: MLAConfig) -> dict:
+    d, h = cfg.d_model, cfg.n_heads
+    return {
+        "w_dq": ParamDef((d, cfg.q_lora), ("embed", "lora")),
+        "q_norm": rmsnorm_def(cfg.q_lora, "lora"),
+        "w_uq": ParamDef((cfg.q_lora, h, cfg.qk_nope + cfg.qk_rope),
+                         ("lora", "heads", "head_dim")),
+        "w_dkv": ParamDef((d, cfg.kv_lora), ("embed", "lora")),
+        "kv_norm": rmsnorm_def(cfg.kv_lora, "lora"),
+        "w_kr": ParamDef((d, cfg.qk_rope), ("embed", None)),
+        "w_uk": ParamDef((cfg.kv_lora, h, cfg.qk_nope),
+                         ("lora", "heads", "head_dim")),
+        "w_uv": ParamDef((cfg.kv_lora, h, cfg.v_head),
+                         ("lora", "heads", "head_dim")),
+        "wo": ParamDef((h, cfg.v_head, d), ("heads", "head_dim", "embed")),
+    }
+
+
+def _project_q(p, cfg: MLAConfig, x, positions):
+    cq = rmsnorm(p["q_norm"], jnp.einsum("bsd,dl->bsl", x, p["w_dq"]))
+    q = jnp.einsum("bsl,lhk->bshk", cq, p["w_uq"])
+    q_nope, q_rope = q[..., :cfg.qk_nope], q[..., cfg.qk_nope:]
+    q_rope = rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _compress_kv(p, cfg: MLAConfig, x, positions):
+    c_kv = rmsnorm(p["kv_norm"], jnp.einsum("bsd,dl->bsl", x, p["w_dkv"]))
+    k_rope = jnp.einsum("bsd,dr->bsr", x, p["w_kr"])
+    k_rope = rope(k_rope[:, :, None, :], positions,
+                  cfg.rope_theta)[:, :, 0, :]
+    return c_kv, k_rope
+
+
+def mla_apply(p: dict, cfg: MLAConfig, x: jax.Array,
+              positions: jax.Array) -> jax.Array:
+    """Full-sequence MLA (train). x: (B, S, D)."""
+    y, _ = mla_prefill(p, cfg, x, positions)
+    return y
+
+
+def mla_prefill(p: dict, cfg: MLAConfig, x: jax.Array, positions: jax.Array):
+    """Returns (out, cache=(c_kv, k_rope)) — the compressed KV cache."""
+    q_nope, q_rope = _project_q(p, cfg, x, positions)
+    c_kv, k_rope = _compress_kv(p, cfg, x, positions)
+    k_nope = jnp.einsum("bsl,lhk->bshk", c_kv, p["w_uk"])
+    v = jnp.einsum("bsl,lhv->bshv", c_kv, p["w_uv"])
+    scale = (cfg.qk_nope + cfg.qk_rope) ** -0.5
+    scores = (jnp.einsum("bqhn,bkhn->bhqk", q_nope, k_nope)
+              + jnp.einsum("bqhr,bkr->bhqk", q_rope, k_rope))
+    scores = scores.astype(jnp.float32) * scale
+    bias = _mask_bias(positions, positions, True, 0)
+    probs = jax.nn.softmax(scores + bias[:, None], axis=-1).astype(x.dtype)
+    o = jnp.einsum("bhqk,bkhv->bqhv", probs, v)
+    return jnp.einsum("bqhv,hvd->bqd", o, p["wo"]), (c_kv, k_rope)
+
+
+def mla_decode(p: dict, cfg: MLAConfig, x: jax.Array, cache: tuple,
+               pos: jax.Array):
+    """Absorbed single-token decode against the compressed cache.
+
+    x: (B, 1, D); cache: (c_kv (B, S, kv_lora), k_rope (B, S, qk_rope));
+    pos: (B,).  Returns (out (B, 1, D), new_cache).
+    """
+    b = x.shape[0]
+    q_nope, q_rope = _project_q(p, cfg, x, pos[:, None])
+    c_new, r_new = _compress_kv(p, cfg, x, pos[:, None])
+    c_kv, k_rope = cache
+    from repro.models.layers import cache_write
+    c_kv = cache_write(c_kv, c_new, pos, cfg.uniform_decode)
+    k_rope = cache_write(k_rope, r_new, pos, cfg.uniform_decode)
+
+    # absorb W_uk into q: q_c (B, 1, H, kv_lora)
+    q_c = jnp.einsum("bqhn,lhn->bqhl", q_nope, p["w_uk"])
+    scale = (cfg.qk_nope + cfg.qk_rope) ** -0.5
+    scores = (jnp.einsum("bqhl,bkl->bhqk", q_c, c_kv)
+              + jnp.einsum("bqhr,bkr->bhqk", q_rope, k_rope))
+    scores = scores.astype(jnp.float32) * scale
+    s = c_kv.shape[1]
+    k_pos = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+    bias = _mask_bias(pos[:, None], k_pos, True, 0,
+                      k_len_valid=(pos + 1)[:, None])
+    probs = jax.nn.softmax(scores + bias[:, None], axis=-1).astype(x.dtype)
+    o_c = jnp.einsum("bhqk,bkl->bqhl", probs, c_kv)     # compressed context
+    o = jnp.einsum("bqhl,lhv->bqhv", o_c, p["w_uv"])    # absorb W_uv
+    return jnp.einsum("bqhv,hvd->bqd", o, p["wo"]), (c_kv, k_rope)

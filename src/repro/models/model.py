@@ -1,0 +1,244 @@
+"""build_model(cfg) — the public model API used by launch/, tests and
+benchmarks.
+
+A `ModelBundle` exposes pure functions over plain pytrees:
+
+    bundle.init(key, dtype)              real params
+    bundle.abstract(dtype)               ShapeDtypeStruct params (dry-run)
+    bundle.train_loss(params, batch)     scalar LM loss
+    bundle.prefill(params, batch)        (last logits, cache)
+    bundle.decode_step(params, batch)    (logits, new cache)
+    bundle.input_specs(shape)            (batch SDS pytree, logical-axes tree)
+    bundle.param_axes()                  logical axes of every param
+
+`input_specs` mirrors the assignment's shape grid: ``train_*`` shapes feed
+train_loss, ``prefill_*`` feed prefill, ``decode_*`` / ``long_*`` feed
+decode_step with a fully-populated KV cache of the given sequence length.
+Modality frontends are stubs per the assignment: vision/audio cells receive
+precomputed patch/frame embeddings in the batch.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as T
+from repro.models.module import abstract_params, init_params, logical_axes, \
+    param_count
+from repro.models.transformer import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str                 # train | prefill | decode
+    seq_len: int
+    global_batch: int
+
+
+ASSIGNED_SHAPES = {
+    "train_4k": ShapeSpec("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeSpec("long_500k", "decode", 524288, 1),
+}
+
+# reduced shapes for CPU smoke tests
+SMOKE_SHAPES = {
+    "train_4k": ShapeSpec("train_4k", "train", 32, 2),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32, 2),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32, 2),
+    "long_500k": ShapeSpec("long_500k", "decode", 64, 1),
+}
+
+
+def applicable(cfg: ModelConfig, shape: ShapeSpec) -> tuple[bool, str]:
+    """Assignment skip rules (documented in DESIGN.md §Arch-applicability)."""
+    if shape.name == "long_500k":
+        sub_quadratic = (cfg.family in ("ssm", "hybrid")
+                         or cfg.window_pattern > 0)
+        if not sub_quadratic:
+            return False, ("pure full-attention arch: no sub-quadratic path "
+                           "for 500k decode (skip per assignment)")
+    return True, ""
+
+
+# ---------------------------------------------------------------------------
+# Cache logical axes (mirrors transformer.init_cache structure)
+# ---------------------------------------------------------------------------
+_KV_AX = ("layers", "cache_batch", "cache_seq", "kv_heads", "head_dim")
+_SSM_AX = {
+    "conv_x": ("layers", "cache_batch", None, "heads", "head_dim"),
+    "conv_b": ("layers", "cache_batch", None, None, "state"),
+    "conv_c": ("layers", "cache_batch", None, None, "state"),
+    "state": ("layers", "cache_batch", "heads", "state", "head_dim"),
+}
+
+
+def cache_axes(cfg: ModelConfig) -> dict:
+    if cfg.family == "hybrid":
+        ax = {"groups": {
+            "ssm": {k: (None,) + v for k, v in _SSM_AX.items()},
+            "shared": (_KV_AX, _KV_AX)}}
+        if cfg.n_layers % cfg.shared_every:
+            ax["tail"] = dict(_SSM_AX)
+    elif cfg.family == "encdec":
+        mem_ax = ("layers", "cache_batch", "memory_seq", "kv_heads",
+                  "head_dim")
+        ax = {"layers": {"self": (_KV_AX, _KV_AX),
+                         "cross": (mem_ax, mem_ax)},
+              "memory_pos": ("cache_batch", None)}
+    elif cfg.family == "ssm":
+        ax = {"layers": dict(_SSM_AX)}
+    elif cfg.family == "mla_moe":
+        mla_ax = ("layers", "cache_batch", "cache_seq", None)
+        ax = {"layers": (mla_ax, mla_ax)}
+        if cfg.first_dense_ff:
+            ax["layer0"] = (mla_ax[1:], mla_ax[1:])
+    else:
+        ax = {"layers": (_KV_AX, _KV_AX)}
+    ax["pos"] = ("cache_batch",)
+    return ax
+
+
+# ---------------------------------------------------------------------------
+# Input construction
+# ---------------------------------------------------------------------------
+def _split_vlm(seq: int) -> tuple[int, int]:
+    img = min(1024, max(seq // 4, 1))
+    return img, seq - img
+
+
+def make_inputs(cfg: ModelConfig, shape: ShapeSpec, concrete: bool = False,
+                key: jax.Array | None = None):
+    """Returns (batch pytree, logical-axes pytree).
+
+    concrete=False -> ShapeDtypeStructs (dry-run); True -> real arrays.
+    """
+    b, s = shape.global_batch, shape.seq_len
+    tok_dt, emb_dt = jnp.int32, jnp.bfloat16
+
+    def arr(shp, dt, maxval=None):
+        if not concrete:
+            return jax.ShapeDtypeStruct(shp, dt)
+        k = key if key is not None else jax.random.PRNGKey(0)
+        if dt == jnp.int32:
+            return jax.random.randint(k, shp, 0, maxval or cfg.vocab,
+                                      dtype=dt)
+        return jax.random.normal(k, shp, jnp.float32).astype(dt) * 0.02
+
+    if shape.kind == "train":
+        s_tok = s
+        batch = {}
+        axes = {}
+        if cfg.frontend == "vision":
+            s_img, s_tok = _split_vlm(s)
+            batch["patch_embeds"] = arr((b, s_img, cfg.d_model), emb_dt)
+            axes["patch_embeds"] = ("batch", None, None)
+        if cfg.frontend == "audio":
+            batch["src_embeds"] = arr((b, s, cfg.d_model), emb_dt)
+            axes["src_embeds"] = ("batch", "act_seq", None)
+        batch["tokens"] = arr((b, s_tok), tok_dt)
+        batch["labels"] = arr((b, s_tok), tok_dt)   # loss on text positions
+        axes["tokens"] = ("batch", "act_seq")
+        axes["labels"] = ("batch", "act_seq")
+        return batch, axes
+
+    if shape.kind == "prefill":
+        batch = {"tokens": arr((b, s), tok_dt)}
+        axes = {"tokens": ("batch", "act_seq")}
+        if cfg.frontend == "vision":
+            s_img, s_tok = _split_vlm(s)
+            batch = {"tokens": arr((b, s_tok), tok_dt),
+                     "patch_embeds": arr((b, s_img, cfg.d_model), emb_dt)}
+            axes = {"tokens": ("batch", "act_seq"),
+                    "patch_embeds": ("batch", "act_seq", None)}
+        if cfg.frontend == "audio":
+            batch["src_embeds"] = arr((b, s, cfg.d_model), emb_dt)
+            axes["src_embeds"] = ("batch", "act_seq", None)
+        return batch, axes
+
+    # decode: single token against a full cache of length s
+    src = s if cfg.is_encdec else 0
+    cache_sds = jax.eval_shape(
+        functools.partial(T.init_cache, cfg, b, s, src_len=src))
+    if concrete:
+        cache = T.init_cache(cfg, b, s, src_len=src)
+    else:
+        cache = cache_sds
+    batch = {"token": arr((b,), tok_dt),
+             "pos": (jnp.full((b,), max(s - 1, 0), jnp.int32) if concrete
+                     else jax.ShapeDtypeStruct((b,), jnp.int32)),
+             "cache": cache}
+    axes = {"token": ("cache_batch",), "pos": ("cache_batch",),
+            "cache": cache_axes(cfg)}
+    return batch, axes
+
+
+# ---------------------------------------------------------------------------
+# Bundle
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class ModelBundle:
+    cfg: ModelConfig
+    skeleton: dict
+
+    def init(self, key: jax.Array, dtype=jnp.float32):
+        return init_params(self.skeleton, key, dtype)
+
+    def abstract(self, dtype=jnp.bfloat16):
+        return abstract_params(self.skeleton, dtype)
+
+    def param_axes(self):
+        return logical_axes(self.skeleton)
+
+    @property
+    def n_params(self) -> int:
+        return param_count(self.skeleton)
+
+    def train_loss(self, params, batch):
+        return T.train_loss(params, self.cfg, batch)
+
+    def forward(self, params, batch):
+        return T.forward(params, self.cfg, batch)
+
+    def prefill(self, params, batch):
+        return T.prefill(params, self.cfg, batch)
+
+    def decode_step(self, params, batch):
+        return T.decode_step(params, self.cfg, batch)
+
+    def input_specs(self, shape: ShapeSpec, concrete: bool = False,
+                    key=None):
+        return make_inputs(self.cfg, shape, concrete, key)
+
+    def step_fn(self, shape: ShapeSpec) -> Callable:
+        if shape.kind == "train":
+            return self.train_loss
+        if shape.kind == "prefill":
+            return self.prefill
+        return self.decode_step
+
+
+def pad_cache(cfg: ModelConfig, cache, extra: int):
+    """Grow every cache_seq dimension by `extra` zero slots (decode room)."""
+    axes = cache_axes(cfg)
+    flat_c, treedef = jax.tree.flatten(cache)
+    flat_a = treedef.flatten_up_to(axes)
+    out = []
+    for c, a in zip(flat_c, flat_a):
+        if isinstance(a, tuple) and "cache_seq" in a:
+            widths = [(0, 0)] * c.ndim
+            widths[a.index("cache_seq")] = (0, extra)
+            c = jnp.pad(c, widths)
+        out.append(c)
+    return jax.tree.unflatten(treedef, out)
+
+
+def build_model(cfg: ModelConfig) -> ModelBundle:
+    return ModelBundle(cfg=cfg, skeleton=T.model_def(cfg))

@@ -1,0 +1,133 @@
+"""Minimal functional module system: param skeletons with logical axes.
+
+No flax — params are plain pytrees.  A model first builds a *skeleton*
+(nested dict of ParamDef), from which we derive, with one tree_map each:
+
+  * init_params(skel, key)        -> pytree of jnp arrays (real init)
+  * abstract_params(skel)         -> pytree of ShapeDtypeStruct (dry-run)
+  * logical_axes(skel)            -> pytree of axis-name tuples
+
+Logical axis names are resolved to mesh axes by distributed/sharding.py
+(MaxText-style rules table), so model code never mentions mesh axes.
+
+The matmul *backend* is how the paper's technique enters the model zoo:
+every linear layer routes through `MatmulBackend.apply`, which is either a
+plain einsum (`dense`) or the full ROSA optical pipeline (`rosa`, built on
+core.onn_linear.rosa_matmul with a per-layer WS/IS mapping plan).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# Param skeletons
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    shape: tuple[int, ...]
+    axes: tuple[str | None, ...]          # logical axis per dim
+    init: str = "normal"                  # normal | zeros | ones | scaled
+    scale: float | None = None            # stddev override
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def _is_def(x) -> bool:
+    return isinstance(x, ParamDef)
+
+
+def init_params(skel, key: jax.Array, dtype=jnp.float32):
+    leaves, treedef = jax.tree.flatten(skel, is_leaf=_is_def)
+    keys = jax.random.split(key, len(leaves))
+
+    def mk(d: ParamDef, k):
+        if d.init == "zeros":
+            return jnp.zeros(d.shape, dtype)
+        if d.init == "ones":
+            return jnp.ones(d.shape, dtype)
+        std = d.scale if d.scale is not None else 1.0 / np.sqrt(
+            max(1, d.shape[0] if len(d.shape) > 1 else d.shape[-1]))
+        return (jax.random.normal(k, d.shape, jnp.float32) * std).astype(dtype)
+
+    return jax.tree.unflatten(treedef, [mk(d, k) for d, k in zip(leaves, keys)])
+
+
+def abstract_params(skel, dtype=jnp.bfloat16):
+    return jax.tree.map(lambda d: jax.ShapeDtypeStruct(d.shape, dtype), skel,
+                        is_leaf=_is_def)
+
+
+def logical_axes(skel):
+    return jax.tree.map(lambda d: d.axes, skel, is_leaf=_is_def)
+
+
+def param_count(skel) -> int:
+    return sum(int(np.prod(d.shape))
+               for d in jax.tree.leaves(skel, is_leaf=_is_def))
+
+
+# ---------------------------------------------------------------------------
+# Matmul backend — where ROSA plugs in
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class MatmulBackend:
+    """Routes every linear layer's contraction.
+
+    kind='dense': jnp.einsum in bf16/f32 — the production default when the
+      optical accelerator is not attached (and the dry-run/roofline path).
+    kind='rosa' : core.onn_linear.rosa_matmul with this layer's RosaConfig —
+      8-bit signed-digit OSA MAC with WS/IS noise placement.
+    """
+
+    kind: str = "dense"
+    rosa_cfg: Any = None          # core.onn_linear.RosaConfig when kind='rosa'
+    plan: Any = None              # optional {layer_name: Mapping} hybrid plan
+
+    def apply(self, x: jax.Array, w: jax.Array, *, name: str = "",
+              key: jax.Array | None = None) -> jax.Array:
+        if self.kind == "dense":
+            return jnp.einsum("...k,kn->...n", x, w)
+        if self.kind == "rosa":
+            import dataclasses as _dc
+
+            from repro.core.onn_linear import rosa_matmul
+            cfg = self.rosa_cfg
+            if self.plan and name in self.plan:
+                cfg = _dc.replace(cfg, mapping=self.plan[name])
+            return rosa_matmul(x, w.astype(jnp.float32), cfg, key)
+        raise ValueError(self.kind)
+
+
+DENSE = MatmulBackend(kind="dense")
+
+
+# ---------------------------------------------------------------------------
+# Small shared helpers
+# ---------------------------------------------------------------------------
+
+
+def linear_def(d_in: int, d_out: int, axes=("embed", "mlp"),
+               scale: float | None = None) -> ParamDef:
+    return ParamDef((d_in, d_out), axes, "normal", scale)
+
+
+def merge(*trees) -> dict:
+    out: dict = {}
+    for t in trees:
+        out.update(t)
+    return out
+
+
+Pytree = Any
+Forward = Callable[..., Any]

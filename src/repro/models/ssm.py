@@ -1,0 +1,209 @@
+"""Mamba-2 block (state-space duality, arXiv:2405.21060) — train + decode.
+
+Projections are kept as SEPARATE weights (w_x, w_z, w_b, w_c, w_dt) instead
+of one packed in_proj so each can carry its own logical sharding axis
+(heads -> model TP); the math is identical to the fused projection.
+
+The sequence mix is the SSD recurrence per head h (state S x head dim P):
+
+    H_t = a_t * H_{t-1} + dt_t * B_t x_t^T ,   y_t = C_t H_t + D x_t
+    a_t = exp(-exp(A_log) * dt_t),  dt_t = softplus(dt_raw + dt_bias)
+
+computed in chunked matmul form (jnp here — the Pallas kernel in
+kernels/ssd_scan implements the same chunking for TPU and is validated
+against this code path).  B/C are shared across heads within `n_groups`
+groups (Mamba-2's GVA); a causal depthwise conv (width 4) precedes the scan
+on x/B/C.  Output gate: RMSNorm(y * silu(z)) -> out projection.
+
+ROSA note (DESIGN.md §Arch-applicability): the five projections are GEMMs
+and route through the paper's optical MAC; the SSD scan itself is not a
+GEMM the MRR array can hold stationary and stays on the dense path.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import rmsnorm
+from repro.models.module import ParamDef
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    d_model: int
+    d_state: int = 128
+    head_dim: int = 64
+    expand: int = 2
+    n_groups: int = 1
+    d_conv: int = 4
+    chunk: int = 128
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def n_heads(self) -> int:
+        return self.d_inner // self.head_dim
+
+
+def ssm_def(cfg: SSMConfig) -> dict:
+    d, h, p_, g, s = (cfg.d_model, cfg.n_heads, cfg.head_dim,
+                      cfg.n_groups, cfg.d_state)
+    return {
+        "w_x": ParamDef((d, h, p_), ("embed", "heads", "head_dim")),
+        "w_z": ParamDef((d, h, p_), ("embed", "heads", "head_dim")),
+        "w_b": ParamDef((d, g, s), ("embed", None, "state")),
+        "w_c": ParamDef((d, g, s), ("embed", None, "state")),
+        "w_dt": ParamDef((d, h), ("embed", "heads")),
+        "dt_bias": ParamDef((h,), ("heads",), "zeros"),
+        "a_log": ParamDef((h,), ("heads",), "zeros"),
+        "d_skip": ParamDef((h,), ("heads",), "ones"),
+        "conv_x": ParamDef((cfg.d_conv, h, p_), (None, "heads", "head_dim"),
+                           scale=0.5),
+        "conv_b": ParamDef((cfg.d_conv, g, s), (None, None, "state"),
+                           scale=0.5),
+        "conv_c": ParamDef((cfg.d_conv, g, s), (None, None, "state"),
+                           scale=0.5),
+        "gate_norm": ParamDef((h, p_), ("heads", "head_dim"), "ones"),
+        "w_out": ParamDef((h, p_, d), ("heads", "head_dim", "embed")),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Depthwise causal conv along axis 1. x: (B, L, ...); w: (K, ...)."""
+    k = w.shape[0]
+    out = x * w[k - 1]
+    for i in range(1, k):
+        shifted = jnp.pad(x, [(0, 0), (i, 0)] + [(0, 0)] * (x.ndim - 2)
+                          )[:, :x.shape[1]]
+        out = out + shifted * w[k - 1 - i]
+    return jax.nn.silu(out)
+
+
+def _decay(p: dict, dt_raw: jax.Array):
+    """dt_raw: (..., H) -> (dt, loga) both (..., H)."""
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    loga = -jnp.exp(p["a_log"]) * dt
+    return dt, loga
+
+
+def ssd_chunked(x: jax.Array, loga: jax.Array, b: jax.Array, c: jax.Array,
+                chunk: int, state0: jax.Array | None = None):
+    """Batched chunked SSD scan (pure jnp; oracle-equivalent to the kernel).
+
+    x: (B, L, H, P) f32 (dt already folded in); loga: (B, L, H);
+    b, c: (B, L, H, S) (groups pre-broadcast).  Returns
+    (y: (B, L, H, P), state: (B, H, S, P)).  L % chunk == 0.
+    """
+    bsz, l, h, p_ = x.shape
+    s_dim = b.shape[-1]
+    pad = (-l) % chunk
+    if pad:
+        # zero-pad: loga=0 (a=1) keeps the state, b=0 writes nothing
+        x, loga, b, c = (jnp.pad(a, ((0, 0), (0, pad)) + ((0, 0),) * (a.ndim - 2))
+                         for a in (x, loga, b, c))
+    n = (l + pad) // chunk
+    xs = x.reshape(bsz, n, chunk, h, p_)
+    ls = loga.reshape(bsz, n, chunk, h)
+    bs = b.reshape(bsz, n, chunk, h, s_dim)
+    cs = c.reshape(bsz, n, chunk, h, s_dim)
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))[None, :, :, None]
+
+    def step(s, inp):
+        """One chunk: intra-chunk masked-decay attention + state carry."""
+        cq, bq, xq, lq = inp                              # (B, Q, H, ...)
+        lcum = jnp.cumsum(lq, axis=1)                     # (B, Q, H)
+        ltot = lcum[:, -1]                                # (B, H)
+        dmat = jnp.exp(lcum[:, :, None] - lcum[:, None, :])   # (B, Q, Q, H)
+        att = jnp.einsum("bihs,bjhs->bijh", cq, bq) * jnp.where(tri, dmat, 0.0)
+        y = jnp.einsum("bijh,bjhp->bihp", att, xq)
+        y = y + jnp.exp(lcum)[..., None] * jnp.einsum("bqhs,bhsp->bqhp", cq, s)
+        carry_w = jnp.exp(ltot[:, None] - lcum)           # (B, Q, H)
+        s_new = (jnp.exp(ltot)[:, :, None, None] * s
+                 + jnp.einsum("bqhs,bqhp->bhsp", bq * carry_w[..., None], xq))
+        return s_new, y
+
+    if state0 is None:
+        state0 = jnp.zeros((bsz, h, s_dim, p_), jnp.float32)
+    xs_t = tuple(jnp.moveaxis(a, 1, 0) for a in (cs, bs, xs, ls))
+    state, ys = jax.lax.scan(step, state0, xs_t)
+    y = jnp.moveaxis(ys, 0, 1).reshape(bsz, l + pad, h, p_)
+    return y[:, :l], state
+
+
+def ssm_apply(p: dict, cfg: SSMConfig, u: jax.Array) -> jax.Array:
+    """Full-sequence Mamba-2 block. u: (B, L, D) -> (B, L, D)."""
+    h, g = cfg.n_heads, cfg.n_groups
+    x = _causal_conv(jnp.einsum("bld,dhp->blhp", u, p["w_x"]), p["conv_x"])
+    b = _causal_conv(jnp.einsum("bld,dgs->blgs", u, p["w_b"]), p["conv_b"])
+    c = _causal_conv(jnp.einsum("bld,dgs->blgs", u, p["w_c"]), p["conv_c"])
+    z = jnp.einsum("bld,dhp->blhp", u, p["w_z"])
+    dt, loga = _decay(p, jnp.einsum("bld,dh->blh", u, p["w_dt"]))
+
+    rep = h // g
+    b = jnp.repeat(b, rep, axis=2)
+    c = jnp.repeat(c, rep, axis=2)
+    x_eff = x.astype(jnp.float32) * dt[..., None]
+    y, _ = ssd_chunked(x_eff, loga, b.astype(jnp.float32),
+                       c.astype(jnp.float32), cfg.chunk)
+    y = y + p["d_skip"][None, None, :, None] * x.astype(jnp.float32)
+    y = (y.astype(u.dtype) * jax.nn.silu(z))
+    y = rmsnorm(p["gate_norm"].reshape(-1), y.reshape(*y.shape[:2], -1)
+                ).reshape(y.shape)
+    return jnp.einsum("blhp,hpd->bld", y, p["w_out"])
+
+
+# ---------------------------------------------------------------------------
+# Decode (single token, carried state)
+# ---------------------------------------------------------------------------
+def ssm_cache_def(cfg: SSMConfig, batch: int, dtype=jnp.float32) -> dict:
+    k = cfg.d_conv - 1
+    return {
+        "conv_x": jnp.zeros((batch, k, cfg.n_heads, cfg.head_dim), dtype),
+        "conv_b": jnp.zeros((batch, k, cfg.n_groups, cfg.d_state), dtype),
+        "conv_c": jnp.zeros((batch, k, cfg.n_groups, cfg.d_state), dtype),
+        "state": jnp.zeros((batch, cfg.n_heads, cfg.d_state, cfg.head_dim),
+                           dtype),
+    }
+
+
+def _conv_step(cache: jax.Array, xt: jax.Array, w: jax.Array):
+    """cache: (B, K-1, ...) past inputs; xt: (B, ...) new. -> (y, new_cache)."""
+    hist = jnp.concatenate([cache, xt[:, None]], axis=1)      # (B, K, ...)
+    y = jnp.einsum("bk...,k...->b...", hist, w)
+    return jax.nn.silu(y), hist[:, 1:]
+
+
+def ssm_decode(p: dict, cfg: SSMConfig, u: jax.Array, cache: dict):
+    """u: (B, 1, D); cache from ssm_cache_def. Returns (y (B,1,D), cache)."""
+    h, g = cfg.n_heads, cfg.n_groups
+    ut = u[:, 0]
+    x_in = jnp.einsum("bd,dhp->bhp", ut, p["w_x"])
+    b_in = jnp.einsum("bd,dgs->bgs", ut, p["w_b"])
+    c_in = jnp.einsum("bd,dgs->bgs", ut, p["w_c"])
+    z = jnp.einsum("bd,dhp->bhp", ut, p["w_z"])
+    dt, loga = _decay(p, jnp.einsum("bd,dh->bh", ut, p["w_dt"]))
+
+    x, cx = _conv_step(cache["conv_x"], x_in, p["conv_x"])
+    b, cb = _conv_step(cache["conv_b"], b_in, p["conv_b"])
+    c, cc = _conv_step(cache["conv_c"], c_in, p["conv_c"])
+
+    rep = h // g
+    b = jnp.repeat(b, rep, axis=1).astype(jnp.float32)        # (B, H, S)
+    c = jnp.repeat(c, rep, axis=1).astype(jnp.float32)
+    a = jnp.exp(loga)                                         # (B, H)
+    s = cache["state"]
+    x32 = x.astype(jnp.float32) * dt[..., None]
+    s = (a[:, :, None, None] * s
+         + jnp.einsum("bhs,bhp->bhsp", b, x32))
+    y = jnp.einsum("bhs,bhsp->bhp", c, s)
+    y = y + p["d_skip"][None, :, None] * x.astype(jnp.float32)
+    y = y.astype(u.dtype) * jax.nn.silu(z)
+    y = rmsnorm(p["gate_norm"].reshape(-1), y.reshape(y.shape[0], -1)
+                ).reshape(y.shape)
+    out = jnp.einsum("bhp,hpd->bd", y, p["w_out"])[:, None]
+    return out, {"conv_x": cx, "conv_b": cb, "conv_c": cc, "state": s}

@@ -1,0 +1,23 @@
+"""LR schedules (pure functions of the step counter)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def linear_warmup(base_lr: float, warmup_steps: int):
+    def f(step):
+        frac = jnp.minimum(step / max(warmup_steps, 1), 1.0)
+        return base_lr * frac
+    return f
+
+
+def cosine_schedule(base_lr: float, warmup_steps: int, total_steps: int,
+                    min_frac: float = 0.1):
+    def f(step):
+        warm = jnp.minimum(step / max(warmup_steps, 1), 1.0)
+        prog = jnp.clip((step - warmup_steps)
+                        / max(total_steps - warmup_steps, 1), 0.0, 1.0)
+        cos = min_frac + (1 - min_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return base_lr * warm * cos
+    return f

@@ -1,0 +1,1 @@
+from repro.training.cnn_train import evaluate_cnn, train_cnn  # noqa

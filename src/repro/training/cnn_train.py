@@ -1,0 +1,120 @@
+"""QAT training + noisy evaluation for the reduced CNN families.
+
+Matches the paper's Sec. 4 protocol: train with uniform 8-bit quantization
+of inputs/weights (straight-through), then evaluate under DAC + thermal
+noise with a chosen per-layer IS/WS mapping.  All on synth-CIFAR
+(DESIGN.md §8 — CIFAR-10 itself is not available offline).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import mrr
+from repro.core.constants import ComputeMode, Mapping
+from repro.core.onn_linear import RosaConfig
+from repro.data.synth_cifar import train_test_split
+from repro.models.cnn import LITE_MODELS, LITE_SKIPS, cnn_apply, cnn_def
+from repro.models.layers import softmax_xent
+from repro.models.module import init_params
+
+QAT_CFG = RosaConfig(mode=ComputeMode.MIXED, noise=mrr.IDEAL)
+
+
+def _loss(params, specs, skips, x, y, layer_cfgs, key=None):
+    logits = cnn_apply(params, specs, x, layer_cfgs, key,
+                       residual_from=skips)
+    labels = jax.nn.one_hot(y, logits.shape[-1])
+    return -jnp.mean(jnp.sum(labels * jax.nn.log_softmax(logits), -1))
+
+
+def train_cnn(model: str = "alexnet", steps: int = 400, batch: int = 64,
+              lr: float = 3e-3, seed: int = 0, qat: bool = True,
+              n_train: int = 4096, verbose: bool = False):
+    """Returns (params, clean_test_accuracy)."""
+    specs = LITE_MODELS[model]
+    skips = LITE_SKIPS.get(model)
+    (xtr, ytr), (xte, yte) = train_test_split(n_train=n_train, seed=seed)
+    key = jax.random.PRNGKey(seed)
+    params = init_params(cnn_def(specs), key)
+    cfgs = {s.name: QAT_CFG for s in specs} if qat else {}
+
+    # Adam
+    m = jax.tree.map(jnp.zeros_like, params)
+    v = jax.tree.map(jnp.zeros_like, params)
+
+    @jax.jit
+    def step(params, m, v, i, x, y):
+        loss, g = jax.value_and_grad(_loss)(params, specs, skips, x, y, cfgs)
+        m = jax.tree.map(lambda a, b: 0.9 * a + 0.1 * b, m, g)
+        v = jax.tree.map(lambda a, b: 0.99 * a + 0.01 * b * b, v, g)
+        t = i + 1
+        params = jax.tree.map(
+            lambda p, mm, vv: p - lr * (mm / (1 - 0.9 ** t))
+            / (jnp.sqrt(vv / (1 - 0.99 ** t)) + 1e-8), params, m, v)
+        return params, m, v, loss
+
+    rng = np.random.default_rng(seed)
+    for i in range(steps):
+        idx = rng.integers(0, len(xtr), batch)
+        params, m, v, loss = step(params, m, v, i,
+                                  jnp.asarray(xtr[idx]), jnp.asarray(ytr[idx]))
+        if verbose and i % 100 == 0:
+            print(f"  step {i} loss {float(loss):.3f}")
+
+    acc = evaluate_cnn(params, model, cfgs)
+    return params, acc
+
+
+@functools.lru_cache(maxsize=4)
+def _test_set(seed: int = 0):
+    (_, _), (xte, yte) = train_test_split(seed=seed)
+    return jnp.asarray(xte), jnp.asarray(yte)
+
+
+def evaluate_cnn(params, model: str, layer_cfgs: dict | None = None,
+                 key: jax.Array | None = None, n_mc: int = 1,
+                 seed: int = 0) -> float:
+    """Test accuracy (%); with a noisy cfg and n_mc>1, MC-average."""
+    specs = LITE_MODELS[model]
+    skips = LITE_SKIPS.get(model)
+    xte, yte = _test_set(seed)
+
+    @jax.jit
+    def acc_of(params, k):
+        logits = cnn_apply(params, specs, xte, layer_cfgs, k,
+                           residual_from=skips)
+        return jnp.mean(jnp.argmax(logits, -1) == yte)
+
+    if key is None and n_mc == 1:
+        return float(acc_of(params, None)) * 100.0
+    keys = jax.random.split(key if key is not None
+                            else jax.random.PRNGKey(7), n_mc)
+    return float(jnp.mean(jnp.stack([acc_of(params, k)
+                                     for k in keys]))) * 100.0
+
+
+def layer_noise_profile(params, model: str, *,
+                        noise: mrr.NoiseModel = mrr.PAPER_NOISE,
+                        n_mc: int = 3, seed: int = 0) -> dict:
+    """d_l(m): accuracy drop (pp) when ONLY layer l is noisy-analog under
+    mapping m, all other layers exact 8-bit (paper Fig. 6 protocol)."""
+    specs = LITE_MODELS[model]
+    base_cfgs = {s.name: QAT_CFG for s in specs}
+    clean = evaluate_cnn(params, model, base_cfgs)
+    out: dict[str, dict[str, float]] = {}
+    key = jax.random.PRNGKey(seed + 100)
+    for s in specs:
+        out[s.name] = {}
+        for mp in (Mapping.IS, Mapping.WS):
+            cfgs = dict(base_cfgs)
+            cfgs[s.name] = dataclasses.replace(
+                QAT_CFG, mapping=mp, noise=noise)
+            acc = evaluate_cnn(params, model, cfgs, key=key, n_mc=n_mc)
+            out[s.name][mp.value] = max(clean - acc, 0.0)
+    return {"clean": clean, "layers": out}

@@ -1,0 +1,10 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here on purpose — tests must see
+the plain 1-device CPU; only launch/dryrun.py forces 512 devices."""
+
+import jax
+import pytest
+
+
+@pytest.fixture(scope="session")
+def key():
+    return jax.random.PRNGKey(0)

@@ -1,0 +1,71 @@
+"""Event-count energy/EDP model (paper Sec. 3.4, Table 1/3)."""
+
+import pytest
+
+from repro.core import constants as C
+from repro.core import energy as E
+from repro.core.constants import ComputeMode, Mapping, OPEConfig
+
+LAYER = E.LayerShape("conv", m=1024, k=576, n=64)
+OPE = C.ROSA_OPTIMAL
+
+
+def test_table1_ops_ordering():
+    """Mixed mode OPS beats analog (t_TO bottleneck) and digital (1 bit)."""
+    ope = OPEConfig(rows=8, cols=8, tiles=1)
+    assert E.ops_mixed(ope) > E.ops_analog(ope)
+    assert E.ops_mixed(ope) > E.ops_digital(ope) / 8 * 7  # ~N_w x digital
+
+
+def test_osa_reduces_adc_events():
+    no = E.layer_energy(LAYER, OPE, osa=E.NO_OSA)
+    yes = E.layer_energy(LAYER, OPE, osa=E.OSA_OPTIMAL)
+    assert yes.events["adc_conversions"] * 6.9 < no.events["adc_conversions"]
+    assert yes.adc < no.adc
+    assert yes.pd_tia < no.pd_tia
+
+
+def test_osa_lowers_edp():
+    no = E.layer_energy(LAYER, OPE, osa=E.NO_OSA)
+    dflt = E.layer_energy(LAYER, OPE, osa=E.OSA_DEFAULT)
+    opt = E.layer_energy(LAYER, OPE, osa=E.OSA_OPTIMAL)
+    assert opt.edp < dflt.edp < no.edp
+
+
+def test_analog_mode_slower_than_mixed():
+    """DEAP analog reprograms thermo-optically per vector: huge latency."""
+    an = E.layer_energy(LAYER, OPE, mode=ComputeMode.ANALOG)
+    mx = E.layer_energy(LAYER, OPE, mode=ComputeMode.MIXED)
+    assert an.latency > 100 * mx.latency
+
+
+def test_mapping_changes_event_structure():
+    ws = E.layer_energy(LAYER, OPE, Mapping.WS)
+    is_ = E.layer_energy(LAYER, OPE, Mapping.IS)
+    assert ws.events["n_tiles"] != is_.events["n_tiles"]
+    assert ws.energy > 0 and is_.energy > 0
+
+
+def test_energy_components_all_positive():
+    bd = E.layer_energy(LAYER, OPE)
+    for k, v in bd.as_dict().items():
+        assert v >= 0, k
+
+
+def test_network_energy_adds_up():
+    layers = [LAYER, E.LayerShape("fc", m=1, k=4096, n=10, kind="fc")]
+    total = E.network_energy(layers, OPE)
+    parts = [E.layer_energy(l, OPE) for l in layers]
+    assert total.energy == pytest.approx(sum(p.energy for p in parts))
+    assert total.latency == pytest.approx(sum(p.latency for p in parts))
+
+
+def test_depthwise_groups_submatrix():
+    dw = E.LayerShape("dw", m=256, k=64 * 9, n=64, groups=64, kind="dwconv")
+    g, m, k, n = dw.sub_gemm()
+    assert (g, m, k, n) == (64, 256, 9, 1)
+    assert E.layer_energy(dw, OPE).energy > 0
+
+
+def test_adc_energy_scales_exponentially():
+    assert C.adc_energy_per_conversion(8) == 16 * C.adc_energy_per_conversion(4)

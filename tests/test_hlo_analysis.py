@@ -1,0 +1,65 @@
+"""HLO analyzer: trip-count-aware flops/bytes/collectives."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.launch.hlo_analysis import analyze
+
+
+def _compile(f, *args):
+    return jax.jit(f).lower(*args).compile()
+
+
+def test_flops_match_cost_analysis_no_loops(key):
+    def f(x, w):
+        return jnp.sum(jnp.tanh(x @ w) @ w.T)
+    x = jax.ShapeDtypeStruct((64, 128), jnp.float32)
+    w = jax.ShapeDtypeStruct((128, 256), jnp.float32)
+    comp = _compile(f, x, w)
+    rep = analyze(comp.as_text())
+    xla = comp.cost_analysis()["flops"]
+    assert rep.flops == pytest.approx(xla, rel=0.05)
+
+
+def test_scan_trip_count_multiplies():
+    def model(params, x, n):
+        def body(c, p):
+            return jnp.tanh(c @ p), None
+        y, _ = jax.lax.scan(body, x, params)
+        return jnp.sum(y)
+
+    flops = {}
+    for n in (2, 8):
+        p = jax.ShapeDtypeStruct((n, 64, 64), jnp.float32)
+        x = jax.ShapeDtypeStruct((32, 64), jnp.float32)
+        comp = jax.jit(model, static_argnums=2).lower(p, x, n).compile()
+        rep = analyze(comp.as_text())
+        flops[n] = rep.flops
+        assert n in rep.loop_counts.values()
+    assert flops[8] == pytest.approx(4 * flops[2], rel=0.2)
+
+
+def test_collectives_detected_in_psum():
+    mesh = jax.make_mesh((1,), ("d",))
+    from jax.sharding import PartitionSpec as P
+
+    def f(x):
+        return jax.lax.psum(x * 2.0, "d")
+
+    g = jax.jit(jax.shard_map(f, mesh=mesh, in_specs=P("d"),
+                              out_specs=P()))
+    comp = g.lower(jax.ShapeDtypeStruct((16,), jnp.float32)).compile()
+    rep = analyze(comp.as_text())
+    # single-device psum may be optimised away; just assert no crash and
+    # non-negative accounting
+    assert rep.flops >= 0 and rep.bytes > 0
+
+
+def test_bytes_positive_and_scaled(key):
+    def f(x):
+        return jnp.sum(x * 2.0 + 1.0)
+    x = jax.ShapeDtypeStruct((1024, 1024), jnp.float32)
+    rep = analyze(_compile(f, x).as_text())
+    # at least one full read of x
+    assert rep.bytes >= 4 * 1024 * 1024

@@ -1,0 +1,130 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode, shape/dtype sweeps)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import mrr, quant
+from repro.kernels.mrr_transfer import ops as mt_ops
+from repro.kernels.mrr_transfer import ref as mt_ref
+from repro.kernels.osa_matmul import ops as osa_ops
+from repro.kernels.osa_matmul.ref import osa_matmul_ref
+from repro.kernels.ssd_scan import ops as ssd_ops
+from repro.kernels.ssd_scan import ref as ssd_ref
+
+
+# ---------------------------------------------------------------------------
+# osa_matmul
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("m,k,n", [(8, 16, 8), (32, 48, 24), (17, 33, 5),
+                                   (128, 128, 128)])
+@pytest.mark.parametrize("bits", [4, 8])
+def test_osa_kernel_matches_ref(m, k, n, bits, key):
+    k1, k2 = jax.random.split(key)
+    cfg = quant.QuantConfig(bits=bits)
+    q = jnp.round(jax.random.uniform(k1, (m, k), minval=-cfg.qmax,
+                                     maxval=cfg.qmax))
+    w = jax.random.normal(k2, (k, n))
+    y = osa_ops.osa_matmul_int(q, w, quant.plane_weights(cfg),
+                               n_planes=cfg.n_planes, bm=8, bn=8, bk=8)
+    y_ref = osa_matmul_ref(q, w, quant_bits=bits)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=1e-4, atol=1e-3)
+
+
+@pytest.mark.parametrize("fused", [True, False])
+def test_osa_kernel_fused_vs_per_plane(fused, key):
+    k1, k2 = jax.random.split(key)
+    q = jnp.round(jax.random.uniform(k1, (16, 24), minval=-127, maxval=127))
+    w = jax.random.normal(k2, (24, 8))
+    y = osa_ops.osa_matmul_int(q, w, quant.plane_weights(), n_planes=7,
+                               fused=fused, bm=8, bn=8, bk=8)
+    np.testing.assert_allclose(np.asarray(y),
+                               np.asarray(osa_matmul_ref(q, w)),
+                               rtol=1e-4, atol=1e-3)
+
+
+def test_osa_kernel_nonideal_gains(key):
+    """Calibrated (non power-of-two) slot gains flow through the kernel."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    q = jnp.round(jax.random.uniform(k1, (8, 16), minval=-127, maxval=127))
+    w = jax.random.normal(k2, (16, 4))
+    gains = quant.plane_weights() * (1 + 0.01 * jax.random.normal(k3, (7,)))
+    y = osa_ops.osa_matmul_int(q, w, gains, n_planes=7, bm=8, bn=8, bk=8)
+    y_ref = osa_matmul_ref(q, w, gains=gains)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=1e-4, atol=1e-3)
+
+
+def test_osa_float_entrypoint(key):
+    k1, k2 = jax.random.split(key)
+    x = jax.random.normal(k1, (9, 21))
+    w = jax.random.normal(k2, (21, 6))
+    y = osa_ops.osa_matmul(x, w, bm=8, bn=8, bk=8)
+    np.testing.assert_allclose(np.asarray(y),
+                               np.asarray(quant.fake_quant(x) @ w),
+                               rtol=1e-3, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# ssd_scan
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("l,chunk", [(16, 8), (24, 8), (17, 8)])
+@pytest.mark.parametrize("h,g,p,s", [(4, 2, 8, 4), (2, 1, 16, 8)])
+def test_ssd_kernel_matches_sequential(l, chunk, h, g, p, s, key):
+    ks = jax.random.split(key, 4)
+    b = 2
+    x = jax.random.normal(ks[0], (b, l, h, p))
+    loga = -jnp.abs(jax.random.normal(ks[1], (b, l, h))) * 0.2
+    bb = jax.random.normal(ks[2], (b, l, g, s))
+    cc = jax.random.normal(ks[3], (b, l, g, s))
+    y, sf = ssd_ops.ssd_scan(x, loga, bb, cc, chunk=chunk)
+    rep = h // g
+    for bi in range(b):
+        for hi in range(h):
+            gi = hi // rep
+            y_r, s_r = ssd_ref.ssd_scan_ref(
+                x[bi, :, hi], jnp.exp(loga[bi, :, hi]), bb[bi, :, gi],
+                cc[bi, :, gi])
+            np.testing.assert_allclose(np.asarray(y[bi, :, hi]),
+                                       np.asarray(y_r), rtol=2e-3, atol=2e-3)
+            np.testing.assert_allclose(np.asarray(sf[bi, hi]),
+                                       np.asarray(s_r), rtol=2e-3, atol=2e-3)
+
+
+def test_ssd_chunked_ref_matches_sequential(key):
+    ks = jax.random.split(key, 4)
+    l, p, s = 32, 8, 4
+    x = jax.random.normal(ks[0], (l, p))
+    a = jnp.exp(-jnp.abs(jax.random.normal(ks[1], (l,))) * 0.3)
+    bb = jax.random.normal(ks[2], (l, s))
+    cc = jax.random.normal(ks[3], (l, s))
+    y1, s1 = ssd_ref.ssd_scan_ref(x, a, bb, cc)
+    y2, s2 = ssd_ref.ssd_scan_chunked_ref(x, a, bb, cc, chunk=8)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=1e-4,
+                               atol=1e-4)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), rtol=1e-4,
+                               atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# mrr_transfer
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("shape", [(16, 8), (64, 32), (33, 7)])
+def test_mrr_transfer_ideal_matches_ref(shape, key):
+    w = jax.random.uniform(key, shape, minval=-1, maxval=1)
+    out_k = mt_ops.mrr_transfer(w, key, sigma_dac=0.0, sigma_th=0.0)
+    z = jnp.zeros_like(w)
+    out_r = mt_ref.mrr_transfer_ref(w, z, z, sigma_dac=0.0, sigma_th=0.0)
+    np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r),
+                               atol=5e-4)
+
+
+def test_mrr_transfer_noise_statistics(key):
+    """Kernel noise std matches the behavioural model's Monte-Carlo std."""
+    w = jnp.zeros((4096,))
+    out = mt_ops.mrr_transfer(w.reshape(64, 64), key)
+    std_kernel = float(jnp.std(out))
+    std_model = float(mrr.weight_noise_std(jnp.zeros(()), key, 256))
+    assert std_kernel == pytest.approx(std_model, rel=0.35)

@@ -1,0 +1,72 @@
+"""Layer-wise hybrid mapping + OPE array DSE (paper Sec. 3.5)."""
+
+import math
+
+import pytest
+
+from repro.configs.paper_cnns import CNN_WORKLOADS, WORKLOADS
+from repro.core import dse, mapping
+from repro.core.constants import (COMPACT_4X4, DEAP_HIGH_CHANNEL, Mapping,
+                                  MAX_TOTAL_MRRS, MAX_WDM_CHANNELS,
+                                  ROSA_OPTIMAL)
+
+
+def test_alpha_layer_adaptive():
+    """alpha grows log-like with degradation past d_tol (paper Eq.)."""
+    assert mapping.alpha_of(0.0) == pytest.approx(0.01)
+    assert mapping.alpha_of(1.0) == pytest.approx(0.01 + 0.1 * math.log(2))
+    assert mapping.alpha_of(10.0) > mapping.alpha_of(1.0)
+
+
+def test_choose_mapping_prefers_accuracy_when_sensitive():
+    """Big WS degradation + slightly cheaper WS -> IS must win."""
+    p = mapping.LayerProfile("l", d_is=0.5, d_ws=20.0, e_is=1.1, e_ws=1.0)
+    assert mapping.choose_mapping(p) is Mapping.IS
+
+
+def test_choose_mapping_prefers_edp_when_insensitive():
+    """Negligible degradation both ways -> cheaper mapping wins."""
+    p = mapping.LayerProfile("l", d_is=0.01, d_ws=0.01, e_is=2.0, e_ws=1.0)
+    assert mapping.choose_mapping(p) is Mapping.WS
+
+
+def test_hybrid_plan_is_per_layer_argmin():
+    # layer a: noise-critical (both mappings degrade >1% so alpha_l rises;
+    # WS 10x worse) -> IS wins despite 10% higher EDP.  layer b: WS is both
+    # more accurate and cheaper -> WS.
+    profs = [
+        mapping.LayerProfile("a", d_is=5.0, d_ws=50.0, e_is=1.1, e_ws=1.0),
+        mapping.LayerProfile("b", d_is=4.0, d_ws=0.1, e_is=1.3, e_ws=1.0),
+    ]
+    plan = mapping.hybrid_plan(profs)
+    assert plan["a"] is Mapping.IS
+    assert plan["b"] is Mapping.WS
+
+
+def test_dse_candidates_respect_constraints():
+    for ope in dse.default_candidates(include_baselines=False):
+        assert ope.cols <= MAX_WDM_CHANNELS
+        assert ope.total_mrrs <= MAX_TOTAL_MRRS
+
+
+def test_dse_winner_beats_deap_and_compact():
+    """Fig. 7: the best config has lower aggregated relative EDP than both
+    the DEAP-CNNs high-channel setting and the 4x4 compact baseline."""
+    wls = [dse.Workload(n, ls) for n, ls in WORKLOADS.items()]
+    pts = dse.sweep(wls)
+    best = pts[0]
+    by_label = {p.label: p for p in pts}
+    deap = by_label[f"R=113,C=9,T=1"]
+    compact = [p for p in pts if p.ope == COMPACT_4X4][0]
+    assert best.metric < deap.metric
+    assert best.metric < compact.metric
+    assert best.geomean < 1.0            # beats the 4x4 reference itself
+
+
+def test_dse_moderate_arrays_win():
+    """Paper: (8,8)-scale arrays rank near the top; extremes lose."""
+    wls = [dse.Workload(n, ls) for n, ls in CNN_WORKLOADS.items()]
+    pts = dse.sweep(wls)
+    ranks = {p.label: i for i, p in enumerate(pts)}
+    assert ranks["R=8,C=8,T=16"] < ranks["R=1,C=1,T=1024"]
+    assert ranks["R=8,C=8,T=16"] < ranks["R=113,C=9,T=1"]

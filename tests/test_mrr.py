@@ -1,0 +1,73 @@
+"""MRR voltage->weight physics (paper Sec. 3.3, Table 2, Fig. 5)."""
+
+import hypothesis as hp
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import constants as C
+from repro.core import mrr
+
+
+def test_eta_lambda_p_matches_eq9():
+    # Eq. (9): 0.238 nm/mW from Table 2 constants
+    assert abs(C.ETA_LAMBDA_P_NM_PER_MW - 0.238) < 2e-3
+
+
+def test_to_hold_power_matches_table3():
+    # 0.5 * gamma / eta = 1.58 mW (paper Sec. 3.4)
+    p = 0.5 * C.GAMMA_HWHM_NM / C.ETA_LAMBDA_P_NM_PER_MW
+    assert abs(p - 1.58) < 0.02
+
+
+def test_fig5b_max_shift_calibration():
+    """1V -> 3V sweep must give exactly the paper's 0.740 nm shift."""
+    p = mrr.DEFAULT_PARAMS
+    d1 = mrr.delta_lambda(mrr.delta_t(jnp.asarray(1.0)))
+    d3 = mrr.delta_lambda(mrr.delta_t(jnp.asarray(3.0)))
+    assert abs(float(d3 - d1) - 0.740) < 1e-3
+
+
+def test_transfer_curve_monotone_decreasing():
+    v, w = mrr.transfer_curve(128)
+    assert np.all(np.diff(np.asarray(w)) < 0)   # more V -> more detuned -> lower w
+
+
+def test_roundtrip_identity_ideal():
+    w = jnp.linspace(-1.0, 1.0, 41)
+    w2 = mrr.realize_weights(w)
+    np.testing.assert_allclose(np.asarray(w2), np.asarray(w), atol=2e-4)
+
+
+def test_out_of_range_targets_saturate():
+    w = jnp.asarray([-2.0, 2.0])
+    w2 = mrr.realize_weights(w)
+    np.testing.assert_allclose(np.asarray(w2), [-1.0, 1.0], atol=2e-3)
+
+
+@hp.given(st.floats(-0.999, 0.999))
+@hp.settings(max_examples=30, deadline=None)
+def test_inverse_is_exact_inverse(wt):
+    v = mrr.voltage_of_weight(jnp.asarray(wt))
+    w = mrr.weight_of_voltage(v)
+    assert abs(float(w) - wt) < 1e-3
+
+
+def test_noise_statistics(key):
+    """Realized-weight std under paper noise is small but nonzero and
+    grows with sigma."""
+    w = jnp.zeros((256,))
+    s1 = mrr.weight_noise_std(jnp.zeros(()), key, 256)
+    s2 = mrr.weight_noise_std(
+        jnp.zeros(()), key, 256,
+        noise=mrr.NoiseModel(sigma_dac=0.04, sigma_th=0.08))
+    assert 1e-4 < float(s1) < 0.2
+    assert float(s2) > float(s1)
+
+
+def test_noisy_realization_unbiased(key):
+    w = jnp.full((4096,), 0.3)
+    out = mrr.realize_weights(w, key, noise=mrr.PAPER_NOISE)
+    assert abs(float(jnp.mean(out)) - 0.3) < 0.01

@@ -1,0 +1,115 @@
+"""Optical shift-and-add semantics (paper Eqs. 1-2, Sec. 3.1)."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import osa, quant
+from repro.core.onn_linear import RosaConfig, rosa_matmul
+from repro.core import mrr
+from repro.core.constants import ComputeMode, Mapping
+
+
+def test_eq2_equivalence_ideal(key):
+    """Ideal OSA == fake-quant matmul (Eq. 1 == Eq. 2)."""
+    k1, k2 = jax.random.split(key)
+    x = jax.random.normal(k1, (12, 33))
+    w = jax.random.normal(k2, (33, 9))
+    y_osa = osa.osa_matmul_ref(x, w)
+    y_ref = quant.fake_quant(x) @ w
+    np.testing.assert_allclose(np.asarray(y_osa), np.asarray(y_ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_pam_equivalence(key):
+    k1, k2 = jax.random.split(key)
+    x = jax.random.normal(k1, (8, 16))
+    w = jax.random.normal(k2, (16, 4))
+    y1 = osa.osa_matmul_ref(x, w, osa.OSAConfig(pam_bits=1))
+    y2 = osa.osa_matmul_ref(x, w, osa.OSAConfig(pam_bits=2))
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_splitter_imbalance_breaks_exactness(key):
+    k1, k2 = jax.random.split(key)
+    x = jax.random.normal(k1, (8, 16))
+    w = jax.random.normal(k2, (16, 4))
+    y_ideal = osa.osa_matmul_ref(x, w)
+    y_bad = osa.osa_matmul_ref(x, w, osa.OSAConfig(splitter_imbalance=0.02))
+    assert float(jnp.max(jnp.abs(y_ideal - y_bad))) > 1e-3
+
+
+def test_odl_loss_attenuates(key):
+    cfg = osa.OSAConfig(odl_loss_db_per_stage=0.5)
+    g = osa.slot_gains(cfg)
+    g0 = osa.slot_gains(osa.IDEAL_OSA)
+    # loss hits low-significance slots (more stages) hardest
+    ratio = np.asarray(g / g0)
+    assert ratio[-1] == pytest.approx(1.0)
+    assert np.all(np.diff(ratio) > 0)
+
+
+def test_slot_counts():
+    assert osa.required_slot_count(quant.Q8, 1) == 7
+    assert osa.required_slot_count(quant.Q8, 2) == 4
+    assert osa.required_slot_count(quant.Q8, 3) == 3
+
+
+def test_rosa_matmul_shortcut_equals_plane_path(key):
+    """The ideal-mixed fast path must equal the explicit OSA pipeline."""
+    k1, k2 = jax.random.split(key)
+    x = jax.random.normal(k1, (6, 20))
+    w = jax.random.normal(k2, (20, 5))
+    cfg_fast = RosaConfig()                       # ideal => shortcut
+    y_fast = rosa_matmul(x, w, cfg_fast)
+    y_plane = osa.osa_matmul_ref(quant.fake_quant(x), quant.fake_quant(w))
+    np.testing.assert_allclose(np.asarray(y_fast), np.asarray(y_plane),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_rosa_ws_noise_on_weights_only(key):
+    """WS: repeated calls with the same key give identical results (weights
+    drawn once deterministically); IS noise differs with activations."""
+    k1, k2, kn = jax.random.split(key, 3)
+    x = jax.random.normal(k1, (6, 20))
+    w = jax.random.normal(k2, (20, 5))
+    ws = RosaConfig(mapping=Mapping.WS, noise=mrr.PAPER_NOISE)
+    y1 = rosa_matmul(x, w, ws, kn)
+    y2 = rosa_matmul(x, w, ws, kn)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2))
+    y_clean = rosa_matmul(x, w, RosaConfig())
+    assert float(jnp.max(jnp.abs(y1 - y_clean))) > 1e-5
+
+
+def test_rosa_straight_through_grads(key):
+    k1, k2, kn = jax.random.split(key, 3)
+    x = jax.random.normal(k1, (4, 8))
+    w = jax.random.normal(k2, (8, 3))
+    cfg = RosaConfig(noise=mrr.PAPER_NOISE)
+    gx, gw = jax.grad(
+        lambda x_, w_: jnp.sum(rosa_matmul(x_, w_, cfg, kn)),
+        argnums=(0, 1))(x, w)
+    # straight-through: grads equal those of the exact matmul
+    np.testing.assert_allclose(np.asarray(gx),
+                               np.asarray(jnp.ones((4, 3)) @ w.T), rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(gw),
+                               np.asarray(x.T @ jnp.ones((4, 3))), rtol=1e-5)
+
+
+def test_analog_mode_noisier_than_mixed(key):
+    """DEAP-style analog mode perturbs both operands -> larger error."""
+    k1, k2, kn = jax.random.split(key, 3)
+    x = jax.random.normal(k1, (32, 64))
+    w = jax.random.normal(k2, (64, 16))
+    y_exact = x @ w
+    errs = {}
+    for mode in (ComputeMode.MIXED, ComputeMode.ANALOG):
+        cfg = RosaConfig(mode=mode, noise=mrr.PAPER_NOISE)
+        ys = jnp.stack([rosa_matmul(x, w, cfg, k)
+                        for k in jax.random.split(kn, 8)])
+        errs[mode] = float(jnp.mean(jnp.abs(ys - y_exact)))
+    assert errs[ComputeMode.ANALOG] > errs[ComputeMode.MIXED]

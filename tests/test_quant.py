@@ -1,0 +1,58 @@
+"""Quantization / signed-digit plane invariants (hypothesis-driven)."""
+
+import hypothesis as hp
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import quant as Q
+
+
+@hp.given(st.integers(2, 8), st.integers(0, 2 ** 31 - 1))
+@hp.settings(max_examples=40, deadline=None)
+def test_plane_roundtrip_exact(bits, seed):
+    cfg = Q.QuantConfig(bits=bits)
+    q = jax.random.randint(jax.random.PRNGKey(seed), (32,),
+                           -cfg.qmax, cfg.qmax + 1).astype(jnp.float32)
+    planes = Q.decompose_planes(q, cfg)
+    assert planes.shape == (cfg.n_planes, 32)
+    assert set(np.unique(np.asarray(planes))) <= {-1.0, 0.0, 1.0}
+    np.testing.assert_array_equal(np.asarray(Q.compose_planes(planes, cfg)),
+                                  np.asarray(q))
+
+
+@hp.given(st.integers(2, 8), st.sampled_from([1, 2, 3, 4]),
+          st.integers(0, 2 ** 31 - 1))
+@hp.settings(max_examples=40, deadline=None)
+def test_pam_roundtrip_exact(bits, pam_bits, seed):
+    cfg = Q.QuantConfig(bits=bits)
+    q = jax.random.randint(jax.random.PRNGKey(seed), (16,),
+                           -cfg.qmax, cfg.qmax + 1).astype(jnp.float32)
+    digits = Q.decompose_pam(q, pam_bits, cfg)
+    assert digits.shape[0] == -(-cfg.n_planes // pam_bits)
+    np.testing.assert_array_equal(
+        np.asarray(Q.compose_pam(digits, pam_bits, cfg)), np.asarray(q))
+
+
+@hp.given(st.integers(0, 2 ** 31 - 1))
+@hp.settings(max_examples=20, deadline=None)
+def test_quantize_bounds_and_scale(seed):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (64,)) * 10
+    q, scale = Q.quantize(x)
+    assert float(jnp.max(jnp.abs(q))) <= 127
+    err = jnp.max(jnp.abs(Q.dequantize(q, scale) - x))
+    assert float(err) <= float(scale) / 127 * 0.5 + 1e-6
+
+
+def test_fake_quant_idempotent(key):
+    x = jax.random.normal(key, (128,))
+    x1 = Q.fake_quant(x)
+    x2 = Q.fake_quant(x1)
+    np.testing.assert_allclose(np.asarray(x1), np.asarray(x2), atol=1e-6)
+
+
+def test_fake_quant_straight_through_grad(key):
+    x = jax.random.normal(key, (16,))
+    g = jax.grad(lambda v: jnp.sum(Q.fake_quant(v)))(x)
+    np.testing.assert_allclose(np.asarray(g), 1.0, atol=1e-6)

@@ -1,0 +1,70 @@
+"""Logical-axis resolution: divisibility fallback, no-reuse, priority."""
+
+import types
+
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed.sharding import SERVE_RULES, TRAIN_RULES, resolve_spec
+
+
+class FakeMesh(types.SimpleNamespace):
+    pass
+
+
+MESH = FakeMesh(shape={"pod": 2, "data": 16, "model": 16})
+MESH1 = FakeMesh(shape={"data": 16, "model": 16})
+
+
+def test_train_weight_fsdp_plus_tp():
+    spec = resolve_spec((4096, 64, 128), ("embed", "heads", "head_dim"),
+                        TRAIN_RULES, MESH)
+    assert spec == P(("pod", "data"), "model")
+
+
+def test_divisibility_fallback_drops_axis():
+    # vocab 256206 not divisible by model=16 -> replicated
+    spec = resolve_spec((1024, 256206), ("embed", "vocab"), TRAIN_RULES,
+                        MESH1)
+    assert spec == P(("data",)) or spec == P("data")
+
+
+def test_batch_suffix_fallback():
+    # batch 8 can't take (pod,data)=32 nor (data,)=16 -> replicated
+    spec = resolve_spec((8, 128, 512), ("batch", None, None), TRAIN_RULES,
+                        MESH)
+    assert spec == P()
+    # batch 16 falls back to the ("data",) suffix
+    spec = resolve_spec((16, 128, 512), ("batch", None, None), TRAIN_RULES,
+                        MESH)
+    assert spec == P("data")
+
+
+def test_no_axis_reuse_within_tensor():
+    # both cache_batch and cache_seq want (pod,data): only one gets it
+    spec = resolve_spec((64, 32768, 8, 128),
+                        ("cache_batch", "cache_seq", "kv_heads", "head_dim"),
+                        SERVE_RULES, MESH)
+    used = [a for part in spec if part
+            for a in (part if isinstance(part, tuple) else (part,))]
+    assert len(used) == len(set(used))
+
+
+def test_priority_kv_heads_beats_cache_seq():
+    # kv divisible: kv_heads takes model, seq gets nothing on 1-pod mesh
+    spec = resolve_spec((128, 32768, 16, 64),
+                        ("cache_batch", "cache_seq", "kv_heads", "head_dim"),
+                        SERVE_RULES, MESH1)
+    assert spec[2] == "model"
+    # kv NOT divisible (8 over 16): cache_seq picks up model instead
+    spec = resolve_spec((128, 32768, 8, 64),
+                        ("cache_batch", "cache_seq", "kv_heads", "head_dim"),
+                        SERVE_RULES, MESH1)
+    assert spec[1] == "model" and (len(spec) < 3 or spec[2] is None)
+
+
+def test_long_context_batch1_shards_seq_everywhere():
+    spec = resolve_spec((1, 524288, 8, 256),
+                        ("cache_batch", "cache_seq", "kv_heads", "head_dim"),
+                        SERVE_RULES, MESH)
+    assert spec[1] == ("pod", "data", "model")
