@@ -25,6 +25,7 @@ import json
 
 import jax
 
+from repro import rosa
 from repro.configs.paper_cnns import CNN_WORKLOADS
 from repro.core import energy as E
 from repro.core import mapping as M
@@ -36,21 +37,23 @@ from repro.training.cnn_train import (QAT_CFG, evaluate_cnn,
                                       layer_noise_profile, train_cnn)
 
 
+def _layer_names(model):
+    return [s.name for s in LITE_MODELS[model]]
+
+
 def _acc_with(params, model, mode, mp, noise, n_mc=3, seed=17):
-    specs = LITE_MODELS[model]
-    cfgs = {s.name: dataclasses.replace(QAT_CFG, mode=mode, mapping=mp,
-                                        noise=noise) for s in specs}
-    return evaluate_cnn(params, model, cfgs, key=jax.random.PRNGKey(seed),
-                        n_mc=n_mc)
+    cfg = dataclasses.replace(QAT_CFG, mode=mode, mapping=mp, noise=noise)
+    engine = rosa.Engine.from_config(cfg, layers=_layer_names(model))
+    return evaluate_cnn(params, model, engine,
+                        key=jax.random.PRNGKey(seed), n_mc=n_mc)
 
 
 def _acc_with_plan(params, model, plan, noise, n_mc=3, seed=17):
-    specs = LITE_MODELS[model]
-    cfgs = {s.name: dataclasses.replace(
-        QAT_CFG, mapping=plan.get(s.name, Mapping.WS), noise=noise)
-        for s in specs}
-    return evaluate_cnn(params, model, cfgs, key=jax.random.PRNGKey(seed),
-                        n_mc=n_mc)
+    cfg = dataclasses.replace(QAT_CFG, noise=noise)   # default: WS
+    engine = rosa.Engine.from_hybrid_plan(cfg, plan,
+                                          layers=_layer_names(model))
+    return evaluate_cnn(params, model, engine,
+                        key=jax.random.PRNGKey(seed), n_mc=n_mc)
 
 
 def run_model(model: str, steps: int = 400, n_mc: int = 3,

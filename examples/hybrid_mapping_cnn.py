@@ -4,12 +4,27 @@ QAT-train AlexNet-lite on synth-CIFAR -> profile per-layer IS/WS noise
 sensitivity (Fig. 6) -> join with the full-size EDP table -> balanced-
 metric plan (Sec. 3.5) -> evaluate accuracy + EDP vs WS/IS/analog.
 
+The resulting plan is then lifted into an executable `rosa.Engine` and the
+lite model is re-traced with an `EnergyLedger` attached, so the printed
+behavioural-trace EDP comes from the very matmuls the plan routed.
+
 Run:  PYTHONPATH=src python examples/hybrid_mapping_cnn.py [--steps 250]
 """
 
 import argparse
+import dataclasses
+import os
+import sys
 
+import jax
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 from benchmarks.table4_hybrid import run_model
+from repro import rosa
+from repro.core import mrr
+from repro.core.constants import Mapping, ROSA_OPTIMAL
+from repro.models.cnn import LITE_MODELS
+from repro.training.cnn_train import QAT_CFG
 
 
 if __name__ == "__main__":
@@ -18,7 +33,27 @@ if __name__ == "__main__":
     ap.add_argument("--steps", type=int, default=250)
     args = ap.parse_args()
     res = run_model(args.model, steps=args.steps, n_mc=2)
-    plan = res["plan"]
-    print("\nper-layer plan:")
-    for name, mp in plan.items():
-        print(f"  {name:10s} -> {mp}")
+    plan = {k: Mapping(v) for k, v in res["plan"].items()}
+
+    # lift the plan into the execution API and re-trace the lite model
+    specs = LITE_MODELS[args.model]
+    ledger = rosa.EnergyLedger()
+    engine = rosa.Engine.from_hybrid_plan(
+        dataclasses.replace(QAT_CFG, noise=mrr.PAPER_NOISE), plan,
+        layers=[s.name for s in specs],
+        key=jax.random.PRNGKey(0), ledger=ledger)
+
+    print("\nper-layer plan (resolved through the Engine):")
+    for s in specs:
+        print(f"  {s.name:10s} -> {engine.config(s.name).mapping.value}")
+
+    from repro.models.cnn import LITE_SKIPS, cnn_apply, cnn_def
+    from repro.models.module import abstract_params
+    import jax.numpy as jnp
+    skel = abstract_params(cnn_def(specs), dtype=jnp.float32)
+    jax.eval_shape(lambda p, x: cnn_apply(p, specs, x, engine,
+                                          residual_from=LITE_SKIPS.get(
+                                              args.model)),
+                   skel, jax.ShapeDtypeStruct((8, 32, 32, 3), jnp.float32))
+    print(f"\nlite-model behavioural-trace EDP (batch 8, (8,8) array): "
+          f"{ledger.edp(ROSA_OPTIMAL):.4g} J*s over {len(ledger)} matmuls")

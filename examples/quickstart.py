@@ -2,7 +2,8 @@
 
   1. the MRR voltage->weight physics chain (Fig. 5),
   2. an OSA bit-serial optical matmul == its exact digital reference,
-  3. noise-aware execution under WS vs IS mapping,
+  3. the rosa.Engine: hybrid WS/IS execution plan, per-layer keys, and
+     trace-based energy accounting from the same routed matmuls,
   4. the energy model: one conv layer with and without OSA,
   5. the array-size DSE winner.
 
@@ -12,9 +13,9 @@ Run:  PYTHONPATH=src python examples/quickstart.py
 import jax
 import jax.numpy as jnp
 
+from repro import rosa
 from repro.core import dse, energy, mrr, osa
 from repro.core.constants import Mapping, ROSA_OPTIMAL
-from repro.core.onn_linear import RosaConfig, rosa_matmul
 from repro.configs.paper_cnns import WORKLOADS
 
 key = jax.random.PRNGKey(0)
@@ -37,11 +38,24 @@ from repro.core.quant import fake_quant
 print("\nOSA == 8-bit reference:",
       bool(jnp.allclose(y_osa, fake_quant(x) @ w, atol=1e-4)))
 
-# 3. WS vs IS noise placement
-for mp in (Mapping.WS, Mapping.IS):
-    cfg = RosaConfig(mapping=mp, noise=mrr.PAPER_NOISE)
-    err = jnp.mean(jnp.abs(rosa_matmul(x, w, cfg, key) - x @ w))
-    print(f"mapping={mp.value:17s} mean |err| = {float(err):.4f}")
+# 3. the Engine: one object owns the per-layer execution plan (hybrid WS/IS
+#    mapping), deterministic per-layer PRNG keys folded from a single base
+#    key, and an EnergyLedger that prices the routed matmuls themselves.
+ledger = rosa.EnergyLedger()
+engine = rosa.Engine.from_hybrid_plan(
+    rosa.RosaConfig(noise=mrr.PAPER_NOISE),      # default: WS everywhere
+    {"proj_is": Mapping.IS},                     # hybrid-plan override
+    key=key, ledger=ledger)
+print()
+for name in ("proj_ws", "proj_is"):
+    y = engine.matmul(x, w, name=name)           # key folded from `name`
+    err = jnp.mean(jnp.abs(y - x @ w))
+    mp = engine.config(name).mapping
+    print(f"layer={name}  mapping={mp.value:17s} mean |err| = {float(err):.4f}")
+traced_plan = {k: v.value for k, v in ledger.mapping_plan().items()}
+print(f"traced EDP of those two matmuls on the (8,8) array: "
+      f"{ledger.edp(ROSA_OPTIMAL):.3e} J*s "
+      f"({len(ledger)} events, plan={traced_plan})")
 
 # 4. energy: OSA cuts the ADC events per output from 7 to 1
 layer = energy.LayerShape("conv3", m=64, k=1728, n=384)

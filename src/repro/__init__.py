@@ -2,6 +2,8 @@
 
 Layers:
   core/         the paper's contribution (physics, OSA, energy, mapping, DSE)
+  rosa/         the execution-plan API: Engine, ExecutionPlan, backend
+                registry (dense/ref/pallas), trace-based EnergyLedger
   kernels/      Pallas TPU kernels for the compute hot spots (+ jnp oracles)
   models/       pure-JAX model zoo (LM fleet + paper CNN families)
   configs/      assigned architecture configs + paper workload tables

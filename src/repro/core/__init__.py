@@ -4,7 +4,7 @@
   mrr         noise-aware voltage->weight chain (Eqs. 3-8) + inverse
   quant       8-bit quantization, signed-digit / PAM plane decomposition
   osa         optical shift-and-add semantics (Eqs. 1-2) + non-idealities
-  onn_linear  rosa_matmul: the optical MAC as a drop-in matmul w/ STE vjp
+  onn_linear  compat shim: rosa_matmul/RosaConfig now live in repro.rosa
   energy      event-count energy/latency/EDP model (Sec. 3.4)
   mapping     layer-wise hybrid IS/WS mapping (Sec. 3.5)
   dse         OPE array design-space exploration (Fig. 7)

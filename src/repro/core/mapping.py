@@ -107,5 +107,22 @@ def plan_edp(layers: Sequence[E.LayerShape], plan: dict[str, Mapping],
              ope: OPEConfig, mode: ComputeMode = ComputeMode.MIXED,
              osa: E.OSAEnergyConfig = E.OSA_OPTIMAL,
              batch: int = 1) -> float:
-    """Network EDP under a given per-layer mapping plan."""
+    """Network EDP under a given per-layer mapping plan.
+
+    The trace-based counterpart is `rosa.EnergyLedger.edp`, which prices the
+    matmuls an Engine actually routed; on the same layers/plan the two agree
+    by construction (tests/test_engine.py asserts it).
+    """
     return E.network_energy(layers, ope, plan, mode, osa, batch=batch).edp
+
+
+def execution_plan(profiles: Sequence[LayerProfile], default_cfg,
+                   layers: Sequence[str] | None = None):
+    """Lift profiled layers straight into an executable `rosa.ExecutionPlan`:
+    per-layer balanced-metric argmin, overriding `default_cfg`'s mapping."""
+    # local import: repro.rosa initializes through repro.core, so a
+    # module-level import here would be circular
+    from repro.rosa import ExecutionPlan
+    return ExecutionPlan.from_mapping_plan(
+        default_cfg, hybrid_plan(profiles),
+        layers if layers is not None else [p.name for p in profiles])

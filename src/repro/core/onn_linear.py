@@ -1,148 +1,28 @@
-"""`rosa_matmul` — the paper's MAC engine as a drop-in JAX matmul.
+"""Compatibility shim — the optical MAC now lives in `repro.rosa`.
 
-Forward semantics (mixed digital-analog mode, Sec. 2-3.1):
+`rosa_matmul` (the paper's MAC engine as a drop-in JAX matmul with
+straight-through gradients) and `RosaConfig` moved to
+`repro.rosa.backends`, where the contraction backend (dense einsum /
+pure-jnp OSA reference / Pallas kernel) is a registry entry selected by
+`RosaConfig.backend` instead of the old `use_kernel` boolean.  Per-layer
+routing, PRNG key folding, and trace-based energy accounting live on
+`repro.rosa.Engine`.
 
-  WS mapping: weights are programmed onto TO-tuned analog MRRs through the
-    noisy voltage chain (mrr.realize_weights); activations take the exact
-    digital EO path (8-bit signed-digit streams) and accumulate via OSA.
-  IS mapping: the roles swap — activations are realized on the noisy analog
-    MRRs, weights travel the exact digital path.
-  ANALOG mode (DEAP baseline): both operands pass the noisy analog chain.
-
-Backward semantics: straight-through — gradients flow as if the matmul were
-exact.  This makes every model in the zoo noise-aware-trainable (QAT) with
-zero graph surgery, which is how the paper fine-tunes its 8-bit CNNs.
-
-The heavy path (bit-plane decomposition + per-plane MXU matmuls + power-of-
-two recombination) is the Pallas kernel in kernels/osa_matmul; this module
-chooses between the kernel and the pure-jnp reference depending on platform
-and carries the custom_vjp.
+This module re-exports the names so existing `repro.core.onn_linear`
+imports keep working; new code should import from `repro.rosa`.
 """
 
 from __future__ import annotations
 
-import dataclasses
-from functools import partial
-
-import jax
-import jax.numpy as jnp
-
-from repro.core import mrr, osa, quant
-from repro.core.constants import ComputeMode, Mapping
+__all__ = ["DEFAULT", "RosaConfig", "make_backend", "rosa_matmul"]
 
 
-@dataclasses.dataclass(frozen=True)
-class RosaConfig:
-    """Per-layer execution config for the optical backend."""
-
-    mapping: Mapping = Mapping.WS
-    mode: ComputeMode = ComputeMode.MIXED
-    quant_bits: int = 8
-    pam_bits: int = 1
-    noise: mrr.NoiseModel = mrr.IDEAL
-    osa_cfg: osa.OSAConfig = osa.IDEAL_OSA
-    mrr_params: mrr.MRRParams = mrr.DEFAULT_PARAMS
-    use_kernel: bool = False    # route through the Pallas kernel (TPU path)
-
-    @property
-    def qcfg(self) -> quant.QuantConfig:
-        return quant.QuantConfig(bits=self.quant_bits)
-
-
-DEFAULT = RosaConfig()
-
-
-def _noisy_realize(t: jax.Array, cfg: RosaConfig, key: jax.Array | None):
-    """Quantize a tensor to cfg.quant_bits and realize it on analog MRRs.
-
-    Values are normalized per-tensor to the MRR weight range [q_min, q_max],
-    programmed through the physical chain with DAC/thermal noise, and
-    de-normalized.  This is where WS puts weights and IS puts activations.
-    """
-    scale = jnp.maximum(jnp.max(jnp.abs(t)), 1e-8)
-    q = quant.fake_quant(t / scale, cfg.qcfg)          # 8-bit grid in [-1,1]
-    w = mrr.realize_weights(q, key, cfg.mrr_params, cfg.noise)
-    return w * scale
-
-
-def _digital_path(t: jax.Array, cfg: RosaConfig):
-    """Exact digital EO encoding: quantization is the only error source."""
-    return quant.fake_quant(t, cfg.qcfg)
-
-
-def _forward(x: jax.Array, w: jax.Array, cfg: RosaConfig,
-             key: jax.Array | None) -> jax.Array:
-    if cfg.mode is ComputeMode.MIXED:
-        if cfg.noise.is_ideal and cfg.osa_cfg.is_ideal and not cfg.use_kernel:
-            # exactness-preserving shortcut: ideal OSA over signed-digit
-            # planes == fake-quant matmul (tests/test_osa.py asserts this),
-            # so QAT training skips the 7-plane decomposition entirely.
-            return _digital_path(x, cfg) @ _digital_path(w, cfg)
-        if key is not None:
-            k_a, k_b = jax.random.split(key)
-        else:
-            k_a = k_b = None
-        if cfg.mapping in (Mapping.WS, Mapping.GEMM):
-            w_eff = _noisy_realize(w, cfg, k_a) if not cfg.noise.is_ideal \
-                else _digital_path(w, cfg)
-            x_eff = _digital_path(x, cfg)
-        else:  # IS: inputs on the analog rings, weights exact digital
-            w_eff = _digital_path(w, cfg)
-            x_eff = _noisy_realize(x, cfg, k_a) if not cfg.noise.is_ideal \
-                else _digital_path(x, cfg)
-        del k_b
-        if cfg.use_kernel:
-            from repro.kernels.osa_matmul import ops as osa_ops
-            return osa_ops.osa_matmul(x_eff, w_eff, quant_bits=cfg.quant_bits,
-                                      pam_bits=cfg.pam_bits)
-        return osa.osa_matmul_ref(x_eff, w_eff, cfg.osa_cfg, cfg.qcfg)
-    elif cfg.mode is ComputeMode.ANALOG:
-        if key is not None:
-            k_a, k_b = jax.random.split(key)
-        else:
-            k_a = k_b = None
-        w_eff = _noisy_realize(w, cfg, k_a) if not cfg.noise.is_ideal \
-            else _digital_path(w, cfg)
-        x_eff = _noisy_realize(x, cfg, k_b) if not cfg.noise.is_ideal \
-            else _digital_path(x, cfg)
-        return x_eff @ w_eff                      # single-shot analog readout
-    elif cfg.mode is ComputeMode.DIGITAL:
-        return _digital_path(x, cfg) @ _digital_path(w, cfg)
-    raise ValueError(cfg.mode)
-
-
-@partial(jax.custom_vjp, nondiff_argnums=(2,))
-def rosa_matmul(x: jax.Array, w: jax.Array, cfg: RosaConfig = DEFAULT,
-                key: jax.Array | None = None) -> jax.Array:
-    """Optical matmul  y = x @ w  through the configured ROSA pipeline.
-
-    x: (..., K) activations; w: (K, N) weights; returns (..., N).
-    Straight-through gradients w.r.t. both x and w.
-    """
-    lead = x.shape[:-1]
-    y = _forward(x.reshape(-1, x.shape[-1]), w, cfg, key)
-    return y.reshape(*lead, w.shape[-1])
-
-
-def _fwd(x, w, cfg, key):
-    return rosa_matmul(x, w, cfg, key), (x, w)
-
-
-def _bwd(cfg, res, g):
-    x, w = res
-    lead = g.shape[:-1]
-    g2 = g.reshape(-1, g.shape[-1])
-    x2 = x.reshape(-1, x.shape[-1])
-    dx = (g2 @ w.T).reshape(x.shape)
-    dw = x2.T @ g2
-    return dx, dw, None
-
-
-rosa_matmul.defvjp(_fwd, _bwd)
-
-
-def make_backend(cfg: RosaConfig):
-    """Callable matmul backend for models.module.MatmulBackend routing."""
-    def matmul(x, w, key=None):
-        return rosa_matmul(x, w, cfg, key)
-    return matmul
+def __getattr__(name: str):
+    # PEP 562 lazy re-export: repro.core.__init__ imports this module while
+    # repro.rosa may still be mid-initialization (rosa.backends itself
+    # imports repro.core submodules), so the indirection must not resolve
+    # at import time.
+    if name in __all__:
+        from repro.rosa import backends
+        return getattr(backends, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

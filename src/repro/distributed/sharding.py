@@ -33,6 +33,18 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.models.module import ParamDef
 
+
+def shard_map_compat(f, *, mesh, in_specs, out_specs):
+    """jax.shard_map across the API rename: newer jax exposes it at the top
+    level with `check_vma`; older releases have
+    jax.experimental.shard_map.shard_map with `check_rep`."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+    from jax.experimental.shard_map import shard_map as _sm
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=False)
+
 # ---------------------------------------------------------------------------
 # Rules tables
 # ---------------------------------------------------------------------------

@@ -1,3 +1,16 @@
 # OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
 # for compute hot-spots the paper itself optimizes with a custom
 # kernel. Leave this package empty if the paper has none.
+
+
+def tpu_compiler_params(**kwargs):
+    """Pallas TPU CompilerParams across the jax rename (TPUCompilerParams
+    in older releases).  Raises a descriptive error if neither exists."""
+    import jax.experimental.pallas.tpu as pltpu
+    cls = getattr(pltpu, "CompilerParams",
+                  getattr(pltpu, "TPUCompilerParams", None))
+    if cls is None:
+        raise ImportError(
+            "jax.experimental.pallas.tpu exposes neither CompilerParams nor "
+            "TPUCompilerParams; unsupported jax version")
+    return cls(**kwargs)

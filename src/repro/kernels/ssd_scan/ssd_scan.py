@@ -27,6 +27,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
+from repro.kernels import tpu_compiler_params
+
 
 def _kernel(x_ref, loga_ref, b_ref, c_ref, y_ref, sf_ref, state_ref,
             *, n_chunks: int):
@@ -101,7 +103,7 @@ def ssd_scan_pallas(x: jax.Array, loga: jax.Array, b: jax.Array,
             jax.ShapeDtypeStruct((bh, s_dim, p), jnp.float32),
         ],
         scratch_shapes=[pltpu.VMEM((s_dim, p), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(x, loga, b, c)

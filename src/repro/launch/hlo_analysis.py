@@ -124,8 +124,10 @@ def _operand_names(rhs: str, op: str) -> list[str]:
     m = re.search(re.escape(op) + r"\(([^)]*)\)", rhs)
     if not m:
         return []
-    return [t.strip().lstrip("%") for t in m.group(1).split(",")
-            if t.strip().startswith("%")]
+    # Operands may print bare ("%a, %b") or with inline shapes
+    # ("f32[64,128]{1,0} %a, ..." — older jax); shape dims contain commas,
+    # so extract the %names directly instead of comma-splitting.
+    return re.findall(r"%([\w\.\-]+)", m.group(1))
 
 
 def _sym_bytes(comp: Comp, names: list[str]) -> int:

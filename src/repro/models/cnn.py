@@ -1,28 +1,28 @@
 """Reduced CNN families for the paper's behavioural experiments.
 
 AlexNet / VGG16 / ResNet18 / MobileNetV3 at CIFAR scale, every conv/fc
-lowered to im2col + matmul so the contraction can route through the ROSA
-optical backend (core.onn_linear.rosa_matmul) with a PER-LAYER execution
-config — exactly the knob the paper's hybrid mapping turns.  Widths are
-reduced (documented in DESIGN.md §8) so QAT runs in minutes on one CPU
-core; layer NAMES match configs/paper_cnns.py so behavioural noise
-profiles join against the full-size EDP table rows.
+lowered to im2col + matmul so the contraction routes through a
+`rosa.Engine` with a PER-LAYER execution plan — exactly the knob the
+paper's hybrid mapping turns.  Widths are reduced (documented in DESIGN.md
+§8) so QAT runs in minutes on one CPU core; layer NAMES match
+configs/paper_cnns.py so behavioural noise profiles join against the
+full-size EDP table rows.
 
 API:
-    specs = LITE_MODELS["alexnet"]
-    skel  = cnn_def(specs)
-    logits = cnn_apply(params, specs, images, layer_cfgs={name: RosaConfig})
+    specs  = LITE_MODELS["alexnet"]
+    skel   = cnn_def(specs)
+    engine = rosa.Engine.from_config(cfg, layers=[s.name for s in specs])
+    logits = cnn_apply(params, specs, images, engine)
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.onn_linear import RosaConfig, rosa_matmul
+from repro import rosa
 from repro.models.module import ParamDef
 
 
@@ -63,58 +63,53 @@ def cnn_def(specs: list[ConvSpec], n_classes: int = 10) -> dict:
     return p
 
 
-def _contract(x2: jax.Array, w: jax.Array, cfg: RosaConfig | None,
-              key) -> jax.Array:
-    if cfg is None:
-        return x2 @ w
-    return rosa_matmul(x2, w, cfg, key)
-
-
 def cnn_apply(params: dict, specs: list[ConvSpec], x: jax.Array,
-              layer_cfgs: dict[str, RosaConfig] | None = None,
+              engine: rosa.Engine | None = None,
               key: jax.Array | None = None,
               residual_from: dict[str, str] | None = None) -> jax.Array:
     """Forward; x: (B, 32, 32, 3) -> logits (B, n_classes).
 
-    layer_cfgs maps layer name -> RosaConfig (None/missing = exact dense).
+    `engine` routes every contraction by layer name (None = all-dense);
+    `key` overrides the engine's base PRNG key for this call (per-layer
+    noise keys are folded deterministically from it by the engine).
     residual_from: {layer_name: earlier_layer_name} adds skip connections
     (ResNet family); spatial dims must match.
     """
-    layer_cfgs = layer_cfgs or {}
-    saved: dict[str, jax.Array] = {}
-    keys = {}
+    if engine is None:
+        engine = rosa.Engine.dense()
     if key is not None:
-        ks = jax.random.split(key, len(specs))
-        keys = {s.name: ks[i] for i, s in enumerate(specs)}
+        engine = engine.with_key(key)
+    saved: dict[str, jax.Array] = {}
 
     for s in specs:
         p = params[s.name]
-        cfg = layer_cfgs.get(s.name)
-        k_l = keys.get(s.name)
         if s.kind == "fc":
             if x.ndim > 2:
                 x = jnp.mean(x, axis=(1, 2)) if x.shape[1] > 1 \
                     else x.reshape(x.shape[0], -1)
-            y = _contract(x, p["w"], cfg, k_l) + p["b"]
+            y = engine.matmul(x, p["w"], name=s.name) + p["b"]
         elif s.kind == "dwconv":
             patches = _im2col(x, s.k, s.stride)
             b, h, w_, _ = patches.shape
             pr = patches.reshape(b, h, w_, s.c_in, s.k * s.k)
-            # per-channel contraction; noise semantics follow the cfg but
-            # the contraction is einsum (C tiny independent sub-GEMMs)
+            # per-channel contraction; noise semantics follow the resolved
+            # cfg but the contraction is einsum (C tiny independent
+            # sub-GEMMs)
+            cfg = engine.config(s.name)
             w_eff = p["w"]
             if cfg is not None and not cfg.noise.is_ideal:
                 from repro.core import mrr
                 from repro.core.quant import fake_quant
                 scale = jnp.maximum(jnp.max(jnp.abs(w_eff)), 1e-8)
                 wq = fake_quant(w_eff / scale, cfg.qcfg)
-                w_eff = mrr.realize_weights(wq, k_l, cfg.mrr_params,
+                w_eff = mrr.realize_weights(wq, engine.key_for(s.name),
+                                            cfg.mrr_params,
                                             cfg.noise) * scale
             y = jnp.einsum("bhwck,ck->bhwc", pr, w_eff) + p["b"]
         else:
             patches = _im2col(x, s.k, s.stride)
             b, h, w_, kk = patches.shape
-            y = _contract(patches.reshape(-1, kk), p["w"], cfg, k_l)
+            y = engine.matmul(patches.reshape(-1, kk), p["w"], name=s.name)
             y = y.reshape(b, h, w_, s.c_out) + p["b"]
         if residual_from and s.name in residual_from:
             y = y + saved[residual_from[s.name]]

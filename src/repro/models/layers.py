@@ -27,6 +27,7 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
+from repro import rosa
 from repro.models.module import MatmulBackend, ParamDef, DENSE
 
 NEG_INF = -2.0e38
@@ -297,9 +298,10 @@ def flash_decode(q: jax.Array, kc: jax.Array, vc: jax.Array,
     batch_part = spec_kv[0] if len(spec_kv) else None
     q_spec = jax.sharding.PartitionSpec(batch_part)     # match kv's batch
     pos_spec = jax.sharding.PartitionSpec(batch_part)
-    return jax.shard_map(local, mesh=mesh,
-                         in_specs=(q_spec, spec_kv, spec_kv, pos_spec),
-                         out_specs=q_spec, check_vma=False)(q, kc, vc, pos)
+    from repro.distributed.sharding import shard_map_compat
+    return shard_map_compat(local, mesh=mesh,
+                            in_specs=(q_spec, spec_kv, spec_kv, pos_spec),
+                            out_specs=q_spec)(q, kc, vc, pos)
 
 
 def attn_decode(p: dict, cfg: AttnConfig, x: jax.Array, cache: tuple,
@@ -350,21 +352,31 @@ def mlp_def(d_model: int, d_ff: int) -> dict:
     }
 
 
-def mlp_apply(p: dict, x: jax.Array, rosa_cfg=None,
-              key: jax.Array | None = None) -> jax.Array:
-    """SwiGLU MLP; with a RosaConfig both projections run through the
-    paper's optical MAC (OSA bit-serial signed-digit pipeline + noisy MRR
-    weight realization — DESIGN.md §3 'execution backends')."""
-    if rosa_cfg is not None:
-        from repro.core.onn_linear import rosa_matmul
+def mlp_apply(p: dict, x: jax.Array, engine: "rosa.Engine | None" = None,
+              key: jax.Array | None = None, *, name: str = "mlp",
+              step: "int | jax.Array" = 0, rosa_cfg=None) -> jax.Array:
+    """SwiGLU MLP; with an optical `rosa.Engine` both projections run
+    through the paper's optical MAC (OSA bit-serial signed-digit pipeline +
+    noisy MRR weight realization — DESIGN.md §3 'execution backends').
+    Each projection gets its own deterministic key, folded from the
+    engine's base key, its `{name}/wi` / `{name}/wo` layer name, and
+    `step`.  Inside a scan-over-layers stack pass the (traced) layer index
+    as `step` so layers draw independent noise — the scanned body traces
+    once, so the name alone cannot distinguish layers (for the same reason
+    an attached EnergyLedger sees the body's two projections once, not L
+    times).  `rosa_cfg` is the legacy spelling (uniform config, no plan)."""
+    if engine is None and rosa_cfg is not None:
+        engine = rosa.Engine.from_config(rosa_cfg)
+    if engine is not None and not engine.is_dense:
+        if key is not None:
+            engine = engine.with_key(key)
         b, s, d = x.shape
         f = p["wi"].shape[-1]
-        gu = rosa_matmul(x.reshape(-1, d).astype(jnp.float32),
-                         p["wi"].reshape(d, 2 * f).astype(jnp.float32),
-                         rosa_cfg, key).reshape(b, s, 2, f)
+        gu = engine.matmul(x.reshape(-1, d), p["wi"].reshape(d, 2 * f),
+                           name=f"{name}/wi", step=step).reshape(b, s, 2, f)
         h = jax.nn.silu(gu[..., 0, :]) * gu[..., 1, :]
-        y = rosa_matmul(h.reshape(-1, f),
-                        p["wo"].astype(jnp.float32), rosa_cfg, key)
+        y = engine.matmul(h.reshape(-1, f), p["wo"], name=f"{name}/wo",
+                          step=step)
         return y.reshape(b, s, d).astype(x.dtype)
     gu = jnp.einsum("bsd,dcf->bscf", x, p["wi"])
     h = jax.nn.silu(gu[..., 0, :]) * gu[..., 1, :]

@@ -11,19 +11,23 @@ Logical axis names are resolved to mesh axes by distributed/sharding.py
 (MaxText-style rules table), so model code never mentions mesh axes.
 
 The matmul *backend* is how the paper's technique enters the model zoo:
-every linear layer routes through `MatmulBackend.apply`, which is either a
-plain einsum (`dense`) or the full ROSA optical pipeline (`rosa`, built on
-core.onn_linear.rosa_matmul with a per-layer WS/IS mapping plan).
+every linear layer routes through `MatmulBackend.apply`, now a thin shim
+over `repro.rosa.Engine` — a plain einsum (`dense`) or the full ROSA
+optical pipeline (`rosa`, with a per-layer WS/IS mapping plan resolved
+through an `ExecutionPlan`).  New code should hold an Engine directly.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro import rosa
 
 # ---------------------------------------------------------------------------
 # Param skeletons
@@ -82,31 +86,31 @@ def param_count(skel) -> int:
 
 @dataclasses.dataclass(frozen=True)
 class MatmulBackend:
-    """Routes every linear layer's contraction.
+    """Routes every linear layer's contraction (shim over `rosa.Engine`).
 
     kind='dense': jnp.einsum in bf16/f32 — the production default when the
       optical accelerator is not attached (and the dry-run/roofline path).
-    kind='rosa' : core.onn_linear.rosa_matmul with this layer's RosaConfig —
-      8-bit signed-digit OSA MAC with WS/IS noise placement.
+    kind='rosa' : the ROSA optical pipeline with this layer's RosaConfig —
+      8-bit signed-digit OSA MAC with WS/IS noise placement, mapping
+      resolved per layer name through the engine's ExecutionPlan.
     """
 
     kind: str = "dense"
-    rosa_cfg: Any = None          # core.onn_linear.RosaConfig when kind='rosa'
+    rosa_cfg: Any = None          # rosa.RosaConfig when kind='rosa'
     plan: Any = None              # optional {layer_name: Mapping} hybrid plan
+
+    @functools.cached_property
+    def engine(self) -> rosa.Engine:
+        if self.kind == "dense":
+            return rosa.Engine.dense()
+        if self.kind == "rosa":
+            cfg = self.rosa_cfg if self.rosa_cfg is not None else rosa.DEFAULT
+            return rosa.Engine.from_hybrid_plan(cfg, dict(self.plan or {}))
+        raise ValueError(self.kind)
 
     def apply(self, x: jax.Array, w: jax.Array, *, name: str = "",
               key: jax.Array | None = None) -> jax.Array:
-        if self.kind == "dense":
-            return jnp.einsum("...k,kn->...n", x, w)
-        if self.kind == "rosa":
-            import dataclasses as _dc
-
-            from repro.core.onn_linear import rosa_matmul
-            cfg = self.rosa_cfg
-            if self.plan and name in self.plan:
-                cfg = _dc.replace(cfg, mapping=self.plan[name])
-            return rosa_matmul(x, w.astype(jnp.float32), cfg, key)
-        raise ValueError(self.kind)
+        return self.engine.matmul(x, w, name=name, key=key)
 
 
 DENSE = MatmulBackend(kind="dense")

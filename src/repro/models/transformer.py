@@ -29,6 +29,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro import rosa
 from repro.distributed.sharding import (current_ctx, ep_param_specs, shard_act)
 from repro.models import layers as L
 from repro.models import mla as MLA
@@ -113,7 +114,8 @@ def layer_meta(cfg: ModelConfig) -> dict:
     else:
         window = jnp.zeros_like(li)
         theta = jnp.full((cfg.n_layers,), cfg.rope_theta)
-    return {"window": window, "theta": theta.astype(jnp.float32)}
+    return {"window": window, "theta": theta.astype(jnp.float32),
+            "idx": li}
 
 
 # ---------------------------------------------------------------------------
@@ -125,11 +127,14 @@ def _ffn_def(cfg: ModelConfig) -> dict:
     return L.mlp_def(cfg.d_model, cfg.d_ff)
 
 
-def _ffn_apply(p: dict, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+def _ffn_apply(p: dict, cfg: ModelConfig, x: jax.Array,
+               step=0) -> jax.Array:
     if cfg.moe is None:
         if cfg.rosa_mlp:
-            from repro.core.onn_linear import DEFAULT as ROSA_DEFAULT
-            return L.mlp_apply(p, x, rosa_cfg=ROSA_DEFAULT)
+            # step = (traced) layer index: layers in a scanned stack
+            # must fold independent noise keys (see mlp_apply)
+            return L.mlp_apply(p, x, engine=rosa.Engine.from_config(),
+                               step=step)
         return L.mlp_apply(p, x)
     ctx = current_ctx()
     if cfg.moe_ep and ctx is not None and ctx.mesh is not None:
@@ -150,10 +155,11 @@ def _ffn_apply(p: dict, cfg: ModelConfig, x: jax.Array) -> jax.Array:
             MOE.moe_ep_local, cfg=cfg.moe, model_axis="model",
             fsdp_axes=fsdp, a2a=a2a)
         specs = ep_param_specs(p, fsdp)
-        return jax.shard_map(
+        from repro.distributed.sharding import shard_map_compat
+        return shard_map_compat(
             lambda pl_, xl: fn(pl_, x_local=xl),
             mesh=mesh, in_specs=(specs, x_spec),
-            out_specs=x_spec, check_vma=False)(p, x)
+            out_specs=x_spec)(p, x)
     return MOE.moe_ref(p, cfg.moe, x)
 
 
@@ -200,7 +206,8 @@ def _block_fwd(p: dict, cfg: ModelConfig, x, positions, meta,
         x = x + L.attn_apply(p["cross"], ccfg, h, positions,
                              memory=memory, memory_pos=memory_pos)
     h = L.rmsnorm(p["ln2"], x, cfg.norm_eps)
-    return x + shard_act(_ffn_apply(p["ffn"], cfg, h), "batch", None, None)
+    return x + shard_act(_ffn_apply(p["ffn"], cfg, h, meta.get("idx", 0)),
+                         "batch", None, None)
 
 
 def _block_prefill(p: dict, cfg: ModelConfig, x, positions, meta):
@@ -218,7 +225,7 @@ def _block_prefill(p: dict, cfg: ModelConfig, x, positions, meta):
         cache = tuple(c.astype(cfg.cache_dtype) for c in cache)
     x = x + a
     h = L.rmsnorm(p["ln2"], x, cfg.norm_eps)
-    return x + _ffn_apply(p["ffn"], cfg, h), cache
+    return x + _ffn_apply(p["ffn"], cfg, h, meta.get("idx", 0)), cache
 
 
 def _block_decode(p: dict, cfg: ModelConfig, x, pos, meta, cache,
@@ -247,7 +254,7 @@ def _block_decode(p: dict, cfg: ModelConfig, x, pos, meta, cache,
                              memory_pos=memory_pos)
         x = x + a
     h = L.rmsnorm(p["ln2"], x, cfg.norm_eps)
-    return x + _ffn_apply(p["ffn"], cfg, h), cache
+    return x + _ffn_apply(p["ffn"], cfg, h, meta.get("idx", 0)), cache
 
 
 def _ssm_prefill(p: dict, scfg: SSM.SSMConfig, u: jax.Array):

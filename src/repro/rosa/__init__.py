@@ -1,0 +1,49 @@
+"""rosa — the unified execution-plan API over the optical backend.
+
+Everything the paper's pipeline needs to execute a network optically enters
+through two objects:
+
+  `ExecutionPlan`   frozen, hashable (static-pytree) resolution from layer
+                    name to `RosaConfig` — a default config plus per-layer
+                    overrides.  The layer-wise hybrid IS/WS mapping
+                    (Sec. 3.5) is an override set built by
+                    `ExecutionPlan.from_mapping_plan`.
+
+  `Engine`          routes every named matmul: resolves the layer's config
+                    from the plan, folds a deterministic per-layer/per-step
+                    PRNG key from its base key (`layer_key`), records the
+                    GEMM shape on an optional `EnergyLedger`, and dispatches
+                    to the registered contraction backend.
+
+Backends (`rosa.backends`) are registered by name — `dense` exact einsum,
+`ref` pure-jnp OSA (Eq. 1 oracle), `pallas` TPU kernel — and selected by
+`RosaConfig.backend` ("auto" picks per platform).  `register_backend` adds
+new ones; later scaling PRs (sharded serving, batching, fused kernels) plug
+in here.
+
+`EnergyLedger` prices the *traced* call sequence with the analytical
+event-count model (core.energy), so `ledger.edp(...)` is computed from the
+same matmuls that produced the numerics — by construction it agrees with
+`core.mapping.plan_edp` on the equivalent LayerShape list.
+
+Migration from the pre-Engine API:
+
+    MatmulBackend(kind="rosa", rosa_cfg=cfg, plan=plan).apply(x, w, name=n)
+      -> Engine.from_hybrid_plan(cfg, plan).matmul(x, w, name=n)
+    RosaConfig(use_kernel=True)  ->  RosaConfig(backend="pallas")
+    {layer: RosaConfig} dicts    ->  Engine.from_layer_cfgs(cfgs)
+    hand-threaded `key=` args    ->  Engine(..., key=base_key) + name folding
+"""
+
+from repro.rosa.backends import (DEFAULT, RosaConfig, backend_names,
+                                 make_backend, register_backend,
+                                 resolve_backend, rosa_matmul)
+from repro.rosa.engine import Engine, layer_key
+from repro.rosa.ledger import EnergyLedger, MatmulEvent
+from repro.rosa.plan import ExecutionPlan
+
+__all__ = [
+    "DEFAULT", "Engine", "EnergyLedger", "ExecutionPlan", "MatmulEvent",
+    "RosaConfig", "backend_names", "layer_key", "make_backend",
+    "register_backend", "resolve_backend", "rosa_matmul",
+]

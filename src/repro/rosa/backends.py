@@ -1,0 +1,214 @@
+"""Execution backends for the ROSA optical matmul + the `RosaConfig` knob.
+
+This module is the single home of the paper's MAC semantics (previously
+`core/onn_linear.py`).  A *backend* is the contraction primitive that turns
+noise-placed operands into outputs:
+
+    dense   exact einsum contraction — the ideal-OSA closed form (Eq. 2),
+            also used for non-optical layers routed by `rosa.Engine`.
+    ref     pure-jnp OSA pipeline (signed-digit planes + slot gains, Eq. 1)
+            — the oracle, honours OSAConfig non-idealities.
+    pallas  the Pallas TPU kernel in kernels/osa_matmul (bit-plane
+            decomposition + per-plane MXU matmuls), interpret-mode on CPU.
+
+Backends are registered by name (`register_backend`) and selected by
+`RosaConfig.backend`; the default "auto" resolves per platform (pallas on
+TPU, ref elsewhere).  This replaces the old `use_kernel: bool` toggle.
+
+Forward semantics (mixed digital-analog mode, Sec. 2-3.1):
+
+  WS mapping: weights are programmed onto TO-tuned analog MRRs through the
+    noisy voltage chain (mrr.realize_weights); activations take the exact
+    digital EO path (8-bit signed-digit streams) and accumulate via OSA.
+  IS mapping: the roles swap — activations are realized on the noisy analog
+    MRRs, weights travel the exact digital path.
+  ANALOG mode (DEAP baseline): both operands pass the noisy analog chain.
+
+Backward semantics: straight-through — gradients flow as if the matmul were
+exact, which makes every model in the zoo noise-aware-trainable (QAT) with
+zero graph surgery.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import mrr, osa, quant
+from repro.core.constants import ComputeMode, Mapping
+
+
+@dataclasses.dataclass(frozen=True)
+class RosaConfig:
+    """Per-layer execution config for the optical backend."""
+
+    mapping: Mapping = Mapping.WS
+    mode: ComputeMode = ComputeMode.MIXED
+    quant_bits: int = 8
+    pam_bits: int = 1
+    noise: mrr.NoiseModel = mrr.IDEAL
+    osa_cfg: osa.OSAConfig = osa.IDEAL_OSA
+    mrr_params: mrr.MRRParams = mrr.DEFAULT_PARAMS
+    backend: str = "auto"   # registered backend name, or "auto" (platform)
+
+    @property
+    def qcfg(self) -> quant.QuantConfig:
+        return quant.QuantConfig(bits=self.quant_bits)
+
+
+DEFAULT = RosaConfig()
+
+
+# ---------------------------------------------------------------------------
+# Backend registry
+# ---------------------------------------------------------------------------
+# A backend contracts noise-placed operands: (x_eff (M,K), w_eff (K,N),
+# cfg: RosaConfig | None) -> (M,N).  cfg is None on the Engine's non-optical
+# (plain dense) layers.
+Backend = Callable[[jax.Array, jax.Array, "RosaConfig | None"], jax.Array]
+
+_BACKENDS: dict[str, Backend] = {}
+
+
+def register_backend(name: str):
+    """Decorator: register a contraction backend under `name`."""
+    def deco(fn: Backend) -> Backend:
+        _BACKENDS[name] = fn
+        return fn
+    return deco
+
+
+def backend_names() -> list[str]:
+    return sorted(_BACKENDS)
+
+
+def resolve_backend(name: str) -> tuple[str, Backend]:
+    """Resolve a backend name ("auto" -> platform pick) to (name, fn)."""
+    if name == "auto":
+        name = "pallas" if jax.default_backend() == "tpu" else "ref"
+    try:
+        return name, _BACKENDS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown backend {name!r}; registered: {backend_names()}"
+        ) from None
+
+
+@register_backend("dense")
+def _dense_backend(x: jax.Array, w: jax.Array, cfg=None) -> jax.Array:
+    return x @ w
+
+
+@register_backend("ref")
+def _ref_backend(x: jax.Array, w: jax.Array, cfg: RosaConfig) -> jax.Array:
+    return osa.osa_matmul_ref(x, w, cfg.osa_cfg, cfg.qcfg)
+
+
+@register_backend("pallas")
+def _pallas_backend(x: jax.Array, w: jax.Array, cfg: RosaConfig) -> jax.Array:
+    # deferred import: pulls in jax.experimental.pallas only when routed here
+    from repro.kernels.osa_matmul import ops as osa_ops
+    return osa_ops.osa_matmul(x, w, quant_bits=cfg.quant_bits,
+                              pam_bits=cfg.pam_bits)
+
+
+# ---------------------------------------------------------------------------
+# Operand conditioning (noise placement)
+# ---------------------------------------------------------------------------
+def _noisy_realize(t: jax.Array, cfg: RosaConfig, key: jax.Array | None):
+    """Quantize a tensor to cfg.quant_bits and realize it on analog MRRs.
+
+    Values are normalized per-tensor to the MRR weight range [q_min, q_max],
+    programmed through the physical chain with DAC/thermal noise, and
+    de-normalized.  This is where WS puts weights and IS puts activations.
+    """
+    scale = jnp.maximum(jnp.max(jnp.abs(t)), 1e-8)
+    q = quant.fake_quant(t / scale, cfg.qcfg)          # 8-bit grid in [-1,1]
+    w = mrr.realize_weights(q, key, cfg.mrr_params, cfg.noise)
+    return w * scale
+
+
+def _digital_path(t: jax.Array, cfg: RosaConfig):
+    """Exact digital EO encoding: quantization is the only error source."""
+    return quant.fake_quant(t, cfg.qcfg)
+
+
+def _forward(x: jax.Array, w: jax.Array, cfg: RosaConfig,
+             key: jax.Array | None) -> jax.Array:
+    if cfg.mode is ComputeMode.MIXED:
+        if cfg.noise.is_ideal and cfg.osa_cfg.is_ideal \
+                and cfg.backend in ("auto", "dense"):
+            # exactness-preserving shortcut: ideal OSA over signed-digit
+            # planes == fake-quant matmul (tests/test_osa.py asserts this),
+            # so QAT training skips the 7-plane decomposition entirely.
+            # Guarded on the UNRESOLVED name: "auto" must stay fast for QAT
+            # even when it would resolve to pallas on TPU, while an EXPLICIT
+            # "ref"/"pallas" request always runs its registered pipeline.
+            # ("dense" is algebraically the shortcut itself.)
+            return _digital_path(x, cfg) @ _digital_path(w, cfg)
+        bname, contract = resolve_backend(cfg.backend)
+        if cfg.mapping in (Mapping.WS, Mapping.GEMM):
+            w_eff = _noisy_realize(w, cfg, key) if not cfg.noise.is_ideal \
+                else _digital_path(w, cfg)
+            x_eff = _digital_path(x, cfg)
+        else:  # IS: inputs on the analog rings, weights exact digital
+            w_eff = _digital_path(w, cfg)
+            x_eff = _noisy_realize(x, cfg, key) if not cfg.noise.is_ideal \
+                else _digital_path(x, cfg)
+        return contract(x_eff, w_eff, cfg)
+    elif cfg.mode is ComputeMode.ANALOG:
+        if key is not None:
+            k_w, k_x = jax.random.split(key)
+        else:
+            k_w = k_x = None
+        w_eff = _noisy_realize(w, cfg, k_w) if not cfg.noise.is_ideal \
+            else _digital_path(w, cfg)
+        x_eff = _noisy_realize(x, cfg, k_x) if not cfg.noise.is_ideal \
+            else _digital_path(x, cfg)
+        return x_eff @ w_eff                      # single-shot analog readout
+    elif cfg.mode is ComputeMode.DIGITAL:
+        return _digital_path(x, cfg) @ _digital_path(w, cfg)
+    raise ValueError(cfg.mode)
+
+
+# ---------------------------------------------------------------------------
+# The drop-in matmul with straight-through gradients
+# ---------------------------------------------------------------------------
+@partial(jax.custom_vjp, nondiff_argnums=(2,))
+def rosa_matmul(x: jax.Array, w: jax.Array, cfg: RosaConfig = DEFAULT,
+                key: jax.Array | None = None) -> jax.Array:
+    """Optical matmul  y = x @ w  through the configured ROSA pipeline.
+
+    x: (..., K) activations; w: (K, N) weights; returns (..., N).
+    Straight-through gradients w.r.t. both x and w.
+    """
+    lead = x.shape[:-1]
+    y = _forward(x.reshape(-1, x.shape[-1]), w, cfg, key)
+    return y.reshape(*lead, w.shape[-1])
+
+
+def _fwd(x, w, cfg, key):
+    return rosa_matmul(x, w, cfg, key), (x, w)
+
+
+def _bwd(cfg, res, g):
+    x, w = res
+    g2 = g.reshape(-1, g.shape[-1])
+    x2 = x.reshape(-1, x.shape[-1])
+    dx = (g2 @ w.T).reshape(x.shape)
+    dw = x2.T @ g2
+    return dx, dw, None
+
+
+rosa_matmul.defvjp(_fwd, _bwd)
+
+
+def make_backend(cfg: RosaConfig):
+    """Callable matmul closure (legacy helper, kept for compatibility)."""
+    def matmul(x, w, key=None):
+        return rosa_matmul(x, w, cfg, key)
+    return matmul

@@ -1,0 +1,138 @@
+"""`Engine` — the single entry point onto the optical path.
+
+The Engine owns the three things every consumer used to re-thread by hand:
+
+  * an `ExecutionPlan` (per-layer RosaConfig resolution, hybrid IS/WS
+    mapping included),
+  * a base PRNG key plus deterministic per-layer / per-step folding, so
+    callers stop plumbing `key=None` through every signature,
+  * an optional `EnergyLedger` that records each routed matmul's GEMM shape
+    at trace time for trace-based EDP accounting.
+
+Backend selection (dense einsum / pure-jnp OSA ref / Pallas kernel) lives
+on each layer's `RosaConfig.backend` and resolves through the registry in
+`rosa.backends` — there is no boolean kernel toggle.
+
+Usage:
+
+    engine = Engine.from_hybrid_plan(RosaConfig(noise=mrr.PAPER_NOISE),
+                                     {"conv3": Mapping.IS},
+                                     key=jax.random.PRNGKey(0))
+    y = engine.matmul(x, w, name="conv3")        # folded key, plan config
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import zlib
+from typing import Iterable, Mapping as TMapping
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.constants import Mapping
+from repro.rosa.backends import DEFAULT, RosaConfig, rosa_matmul
+from repro.rosa.ledger import EnergyLedger
+from repro.rosa.plan import ExecutionPlan
+
+
+def layer_key(base: jax.Array, name: str, step: int | jax.Array = 0
+              ) -> jax.Array:
+    """Deterministic per-layer/per-step key: fold the layer name's CRC and
+    the step counter into the base key.  Same (base, name, step) -> same
+    noise draw, independent draws across layers and steps."""
+    k = jax.random.fold_in(base, zlib.crc32(name.encode("utf-8")) & 0x7FFFFFFF)
+    return jax.random.fold_in(k, step)
+
+
+@dataclasses.dataclass(frozen=True)
+class Engine:
+    """Routes every named matmul through the resolved execution plan."""
+
+    plan: ExecutionPlan = ExecutionPlan()
+    key: jax.Array | None = None
+    ledger: EnergyLedger | None = None
+
+    # -- constructors -------------------------------------------------------
+    @classmethod
+    def dense(cls) -> "Engine":
+        """All layers exact dense einsum (no optical path)."""
+        return cls(ExecutionPlan())
+
+    @classmethod
+    def from_config(cls, cfg: RosaConfig = DEFAULT,
+                    layers: Iterable[str] | None = None,
+                    key: jax.Array | None = None,
+                    ledger: EnergyLedger | None = None) -> "Engine":
+        """Every layer runs the same RosaConfig."""
+        return cls(ExecutionPlan.build(cfg, None, layers), key, ledger)
+
+    @classmethod
+    def from_layer_cfgs(cls, cfgs: TMapping[str, RosaConfig | None],
+                        layers: Iterable[str] | None = None,
+                        key: jax.Array | None = None,
+                        ledger: EnergyLedger | None = None) -> "Engine":
+        """Explicit per-layer configs; unnamed layers are dense."""
+        return cls(ExecutionPlan.build(None, dict(cfgs), layers), key, ledger)
+
+    @classmethod
+    def from_hybrid_plan(cls, cfg: RosaConfig,
+                         plan: TMapping[str, Mapping] | None,
+                         layers: Iterable[str] | None = None,
+                         key: jax.Array | None = None,
+                         ledger: EnergyLedger | None = None) -> "Engine":
+        """`cfg` everywhere, with the mapping field overridden per layer by
+        a `{layer: Mapping}` hybrid plan (core.mapping.hybrid_plan)."""
+        return cls(ExecutionPlan.from_mapping_plan(cfg, plan or {}, layers),
+                   key, ledger)
+
+    # -- derivations --------------------------------------------------------
+    def with_key(self, key: jax.Array | None) -> "Engine":
+        return dataclasses.replace(self, key=key)
+
+    def with_ledger(self, ledger: EnergyLedger | None) -> "Engine":
+        return dataclasses.replace(self, ledger=ledger)
+
+    def with_plan(self, plan: ExecutionPlan) -> "Engine":
+        return dataclasses.replace(self, plan=plan)
+
+    # -- resolution ---------------------------------------------------------
+    @property
+    def is_dense(self) -> bool:
+        return self.plan.is_dense
+
+    def config(self, name: str) -> RosaConfig | None:
+        return self.plan.resolve(name)
+
+    def key_for(self, name: str, step: int | jax.Array = 0
+                ) -> jax.Array | None:
+        return None if self.key is None else layer_key(self.key, name, step)
+
+    # -- the routed matmul --------------------------------------------------
+    def matmul(self, x: jax.Array, w: jax.Array, *, name: str = "",
+               step: int | jax.Array = 0,
+               key: jax.Array | None = None) -> jax.Array:
+        """y = x @ w through this layer's resolved config.
+
+        x: (..., K); w: (K, N).  An explicit `key` overrides the engine's
+        folded per-layer key.  Dense layers (resolved config None) contract
+        exactly in the caller's dtype.
+        """
+        cfg = self.plan.resolve(name)
+        if cfg is None:
+            return jnp.einsum("...k,kn->...n", x, w)
+        if self.ledger is not None:
+            # unnamed matmuls get a shape-stable synthetic name so re-traces
+            # and MC loops dedupe to one event instead of inflating EDP;
+            # the flip side is that distinct unnamed layers of identical
+            # (m, k, n) collapse into one event — pass `name=` for per-layer
+            # accounting
+            m = int(np.prod(x.shape[:-1], dtype=np.int64))
+            k, n = int(x.shape[-1]), int(w.shape[-1])
+            self.ledger.record(name or f"unnamed_{m}x{k}x{n}",
+                               m=m, k=k, n=n, cfg=cfg)
+        if key is None:
+            key = self.key_for(name, step)
+        return rosa_matmul(x.astype(jnp.float32), w.astype(jnp.float32),
+                           cfg, key)

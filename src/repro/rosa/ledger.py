@@ -1,0 +1,104 @@
+"""`EnergyLedger` — trace-based energy accounting for the optical path.
+
+Every matmul routed through `rosa.Engine` records a `MatmulEvent` (layer
+name, GEMM shape, mapping, compute mode) at trace time.  The ledger then
+prices the *recorded* trace with the analytical event-count model
+(core.energy.layer_energy), so EDP numbers are derived from the same call
+sequence that produced the numerics — they cannot drift from a separately
+maintained `LayerShape` list.
+
+Recording happens while JAX traces the network (shapes are static), so the
+canonical usage is one un-cached forward pass:
+
+    ledger = EnergyLedger()
+    engine = Engine.from_hybrid_plan(cfg, plan).with_ledger(ledger)
+    jax.eval_shape(forward, params, x)        # or a direct call
+    print(ledger.edp(ROSA_OPTIMAL))
+
+A jit cache *hit* re-runs no Python and records nothing; trace once (or use
+`jax.eval_shape`, which is free) when you want the ledger populated.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core import energy as E
+from repro.core.constants import ComputeMode, Mapping, OPEConfig
+from repro.rosa.backends import RosaConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class MatmulEvent:
+    """One routed optical matmul, as seen at trace time."""
+
+    name: str
+    m: int
+    k: int
+    n: int
+    mapping: Mapping
+    mode: ComputeMode
+    backend: str
+
+    def layer_shape(self) -> E.LayerShape:
+        return E.LayerShape(self.name, m=self.m, k=self.k, n=self.n,
+                            kind="gemm")
+
+
+class EnergyLedger:
+    """Accumulates MatmulEvents and prices them with core.energy."""
+
+    def __init__(self):
+        self.events: list[MatmulEvent] = []
+
+    def record(self, name: str, m: int, k: int, n: int,
+               cfg: RosaConfig) -> None:
+        self.events.append(MatmulEvent(
+            name=name, m=m, k=k, n=n,
+            mapping=cfg.mapping, mode=cfg.mode, backend=cfg.backend))
+
+    def clear(self) -> None:
+        self.events.clear()
+
+    def __len__(self) -> int:
+        return len(self.events)
+
+    # -- views --------------------------------------------------------------
+    def unique_events(self) -> list[MatmulEvent]:
+        """The 'network' view used for EDP: one event per distinct
+        (name, GEMM shape, mapping, mode), order preserved.  Re-traces and
+        MC loops of the same layer dedupe to one event; the same name traced
+        at a DIFFERENT shape (e.g. a prefill trace then a decode trace) is a
+        distinct workload and keeps its own event rather than being silently
+        discarded — clear() between traces if you want only the latest."""
+        seen: dict[tuple, MatmulEvent] = {}
+        for ev in self.events:
+            seen[(ev.name, ev.m, ev.k, ev.n, ev.mapping, ev.mode)] = ev
+        return list(seen.values())
+
+    def layer_shapes(self) -> list[E.LayerShape]:
+        return [ev.layer_shape() for ev in self.unique_events()]
+
+    def mapping_plan(self) -> dict[str, Mapping]:
+        return {ev.name: ev.mapping for ev in self.unique_events()}
+
+    # -- pricing ------------------------------------------------------------
+    def breakdown(self, ope: OPEConfig,
+                  osa: E.OSAEnergyConfig = E.OSA_OPTIMAL,
+                  batch: int = 1, dedupe: bool = True) -> E.EnergyBreakdown:
+        """Price the trace on an OPE fleet.  With dedupe (default) each named
+        layer counts once — the sequential-network semantics of
+        core.energy.network_energy; without it every recorded call counts."""
+        events = self.unique_events() if dedupe else self.events
+        total = E.EnergyBreakdown(name="trace")
+        for ev in events:
+            total = total + E.layer_energy(ev.layer_shape(), ope,
+                                           ev.mapping, ev.mode, osa,
+                                           batch=batch)
+        return total
+
+    def edp(self, ope: OPEConfig, osa: E.OSAEnergyConfig = E.OSA_OPTIMAL,
+            batch: int = 1, dedupe: bool = True) -> float:
+        """Energy-delay product [J*s] of the recorded trace; equals
+        core.mapping.plan_edp on the same layers/plan by construction."""
+        return self.breakdown(ope, osa, batch=batch, dedupe=dedupe).edp

@@ -4,6 +4,10 @@ Matches the paper's Sec. 4 protocol: train with uniform 8-bit quantization
 of inputs/weights (straight-through), then evaluate under DAC + thermal
 noise with a chosen per-layer IS/WS mapping.  All on synth-CIFAR
 (DESIGN.md §8 — CIFAR-10 itself is not available offline).
+
+Execution routes through `rosa.Engine`: training uses a uniform-QAT plan,
+noisy evaluation swaps in per-layer overrides (`ExecutionPlan.build`), and
+per-layer PRNG keys are folded by the engine from one base key.
 """
 
 from __future__ import annotations
@@ -15,20 +19,24 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import rosa
 from repro.core import mrr
 from repro.core.constants import ComputeMode, Mapping
-from repro.core.onn_linear import RosaConfig
 from repro.data.synth_cifar import train_test_split
 from repro.models.cnn import LITE_MODELS, LITE_SKIPS, cnn_apply, cnn_def
-from repro.models.layers import softmax_xent
 from repro.models.module import init_params
 
-QAT_CFG = RosaConfig(mode=ComputeMode.MIXED, noise=mrr.IDEAL)
+QAT_CFG = rosa.RosaConfig(mode=ComputeMode.MIXED, noise=mrr.IDEAL)
 
 
-def _loss(params, specs, skips, x, y, layer_cfgs, key=None):
-    logits = cnn_apply(params, specs, x, layer_cfgs, key,
-                       residual_from=skips)
+def qat_engine(model: str, key: jax.Array | None = None) -> rosa.Engine:
+    """Uniform 8-bit QAT engine for one lite model (all layers QAT_CFG)."""
+    names = [s.name for s in LITE_MODELS[model]]
+    return rosa.Engine.from_config(QAT_CFG, layers=names, key=key)
+
+
+def _loss(params, specs, skips, x, y, engine, key=None):
+    logits = cnn_apply(params, specs, x, engine, key, residual_from=skips)
     labels = jax.nn.one_hot(y, logits.shape[-1])
     return -jnp.mean(jnp.sum(labels * jax.nn.log_softmax(logits), -1))
 
@@ -42,7 +50,7 @@ def train_cnn(model: str = "alexnet", steps: int = 400, batch: int = 64,
     (xtr, ytr), (xte, yte) = train_test_split(n_train=n_train, seed=seed)
     key = jax.random.PRNGKey(seed)
     params = init_params(cnn_def(specs), key)
-    cfgs = {s.name: QAT_CFG for s in specs} if qat else {}
+    engine = qat_engine(model) if qat else rosa.Engine.dense()
 
     # Adam
     m = jax.tree.map(jnp.zeros_like, params)
@@ -50,7 +58,8 @@ def train_cnn(model: str = "alexnet", steps: int = 400, batch: int = 64,
 
     @jax.jit
     def step(params, m, v, i, x, y):
-        loss, g = jax.value_and_grad(_loss)(params, specs, skips, x, y, cfgs)
+        loss, g = jax.value_and_grad(_loss)(params, specs, skips, x, y,
+                                            engine)
         m = jax.tree.map(lambda a, b: 0.9 * a + 0.1 * b, m, g)
         v = jax.tree.map(lambda a, b: 0.99 * a + 0.01 * b * b, v, g)
         t = i + 1
@@ -67,7 +76,7 @@ def train_cnn(model: str = "alexnet", steps: int = 400, batch: int = 64,
         if verbose and i % 100 == 0:
             print(f"  step {i} loss {float(loss):.3f}")
 
-    acc = evaluate_cnn(params, model, cfgs)
+    acc = evaluate_cnn(params, model, engine)
     return params, acc
 
 
@@ -77,17 +86,20 @@ def _test_set(seed: int = 0):
     return jnp.asarray(xte), jnp.asarray(yte)
 
 
-def evaluate_cnn(params, model: str, layer_cfgs: dict | None = None,
+def evaluate_cnn(params, model: str, engine: rosa.Engine | None = None,
                  key: jax.Array | None = None, n_mc: int = 1,
                  seed: int = 0) -> float:
-    """Test accuracy (%); with a noisy cfg and n_mc>1, MC-average."""
+    """Test accuracy (%); with a noisy engine and n_mc>1, MC-average over
+    base keys (per-layer keys are folded by the engine)."""
     specs = LITE_MODELS[model]
     skips = LITE_SKIPS.get(model)
     xte, yte = _test_set(seed)
+    if engine is None:
+        engine = rosa.Engine.dense()
 
     @jax.jit
     def acc_of(params, k):
-        logits = cnn_apply(params, specs, xte, layer_cfgs, k,
+        logits = cnn_apply(params, specs, xte, engine, k,
                            residual_from=skips)
         return jnp.mean(jnp.argmax(logits, -1) == yte)
 
@@ -105,16 +117,17 @@ def layer_noise_profile(params, model: str, *,
     """d_l(m): accuracy drop (pp) when ONLY layer l is noisy-analog under
     mapping m, all other layers exact 8-bit (paper Fig. 6 protocol)."""
     specs = LITE_MODELS[model]
-    base_cfgs = {s.name: QAT_CFG for s in specs}
-    clean = evaluate_cnn(params, model, base_cfgs)
+    names = [s.name for s in specs]
+    base = qat_engine(model)
+    clean = evaluate_cnn(params, model, base)
     out: dict[str, dict[str, float]] = {}
     key = jax.random.PRNGKey(seed + 100)
     for s in specs:
         out[s.name] = {}
         for mp in (Mapping.IS, Mapping.WS):
-            cfgs = dict(base_cfgs)
-            cfgs[s.name] = dataclasses.replace(
-                QAT_CFG, mapping=mp, noise=noise)
-            acc = evaluate_cnn(params, model, cfgs, key=key, n_mc=n_mc)
+            noisy = dataclasses.replace(QAT_CFG, mapping=mp, noise=noise)
+            engine = base.with_plan(rosa.ExecutionPlan.build(
+                QAT_CFG, {s.name: noisy}, layers=names))
+            acc = evaluate_cnn(params, model, engine, key=key, n_mc=n_mc)
             out[s.name][mp.value] = max(clean - acc, 0.0)
     return {"clean": clean, "layers": out}

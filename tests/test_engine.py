@@ -1,0 +1,246 @@
+"""rosa.Engine execution-plan API: plan resolution, backend parity,
+per-layer key folding, and trace-ledger EDP vs the analytical model."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import rosa
+from repro.core import energy as E
+from repro.core import mapping as M
+from repro.core import mrr
+from repro.core.constants import ComputeMode, Mapping, ROSA_OPTIMAL
+
+NOISY = rosa.RosaConfig(noise=mrr.PAPER_NOISE)
+
+
+# ---------------------------------------------------------------------------
+# ExecutionPlan resolution
+# ---------------------------------------------------------------------------
+def test_plan_override_beats_default():
+    ws = rosa.RosaConfig(mapping=Mapping.WS)
+    is_ = rosa.RosaConfig(mapping=Mapping.IS)
+    plan = rosa.ExecutionPlan.build(ws, {"a": is_}, layers=("a", "b"))
+    assert plan.resolve("a").mapping is Mapping.IS
+    assert plan.resolve("b").mapping is Mapping.WS
+
+
+def test_plan_rejects_unknown_override_names():
+    with pytest.raises(ValueError, match="unknown layers"):
+        rosa.ExecutionPlan.build(rosa.DEFAULT, {"nope": rosa.DEFAULT},
+                                 layers=("a", "b"))
+
+
+def test_plan_rejects_undeclared_lookup():
+    plan = rosa.ExecutionPlan.build(rosa.DEFAULT, layers=("a",))
+    with pytest.raises(KeyError):
+        plan.resolve("zzz")
+    # without a declared layer set, any name resolves to the default
+    open_plan = rosa.ExecutionPlan.build(rosa.DEFAULT)
+    assert open_plan.resolve("zzz") is rosa.DEFAULT
+
+
+def test_plan_from_mapping_plan_and_projection():
+    plan = rosa.ExecutionPlan.from_mapping_plan(
+        NOISY, {"a": Mapping.IS}, layers=("a", "b"))
+    assert plan.resolve("a").mapping is Mapping.IS
+    assert plan.resolve("a").noise == mrr.PAPER_NOISE   # other fields kept
+    assert plan.resolve("b").mapping is Mapping.WS
+    assert plan.mapping_plan() == {"a": Mapping.IS}
+
+
+def test_mapping_execution_plan_bridge():
+    """core.mapping.execution_plan lifts profiled layers into an
+    ExecutionPlan whose per-layer mapping is the balanced-metric argmin."""
+    profiles = [
+        M.LayerProfile("cheap_is", d_is=0.01, d_ws=0.01, e_is=1.0, e_ws=5.0),
+        M.LayerProfile("cheap_ws", d_is=0.01, d_ws=0.01, e_is=5.0, e_ws=1.0),
+        M.LayerProfile("contested", d_is=9.0, d_ws=0.1, e_is=1.0, e_ws=5.0),
+    ]
+    plan = M.execution_plan(profiles, NOISY)
+    assert isinstance(plan, rosa.ExecutionPlan)
+    for p in profiles:
+        assert plan.resolve(p.name).mapping is M.choose_mapping(p)
+        assert plan.resolve(p.name).noise == NOISY.noise     # cfg inherited
+    assert plan.resolve("cheap_is").mapping is Mapping.IS    # EDP argmin
+    assert plan.resolve("cheap_ws").mapping is Mapping.WS
+    with pytest.raises(KeyError):
+        plan.resolve("unprofiled")       # layer set comes from the profiles
+
+
+def test_plan_is_static_pytree():
+    plan = rosa.ExecutionPlan.build(rosa.DEFAULT, layers=("a",))
+    assert jax.tree.leaves(plan) == []          # no array leaves: jit-static
+    assert hash(plan) == hash(rosa.ExecutionPlan.build(rosa.DEFAULT,
+                                                       layers=("a",)))
+
+
+# ---------------------------------------------------------------------------
+# Backend registry parity
+# ---------------------------------------------------------------------------
+def test_backend_registry_names():
+    assert {"dense", "ref", "pallas"} <= set(rosa.backend_names())
+    with pytest.raises(ValueError, match="unknown backend"):
+        rosa.resolve_backend("not-a-backend")
+
+
+def test_backend_parity_ideal_noise(key):
+    """dense == ref == pallas under ideal noise (8-bit exactness).
+
+    Explicit "ref"/"pallas" requests run their registered pipelines even at
+    ideal settings (only "auto"/"dense" take the exactness shortcut), so
+    this genuinely exercises all three contraction paths."""
+    k1, k2 = jax.random.split(key)
+    x = jax.random.normal(k1, (24, 48))
+    w = jax.random.normal(k2, (48, 16))
+    ys = {b: rosa.rosa_matmul(x, w,
+                              dataclasses.replace(rosa.DEFAULT, backend=b))
+          for b in ("dense", "ref", "pallas")}
+    np.testing.assert_allclose(np.asarray(ys["dense"]), np.asarray(ys["ref"]),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(ys["dense"]),
+                               np.asarray(ys["pallas"]),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_backend_parity_noisy_operands(key):
+    """With noise the exactness shortcut is bypassed, so this parity check
+    exercises the actual registered contraction fns on identical
+    noise-placed operands (same key -> same weight realization)."""
+    k1, k2, kn = jax.random.split(key, 3)
+    x = jax.random.normal(k1, (24, 48))
+    w = jax.random.normal(k2, (48, 16))
+    ys = {b: rosa.rosa_matmul(x, w, dataclasses.replace(NOISY, backend=b), kn)
+          for b in ("dense", "ref", "pallas")}
+    # sanity: the noisy path really differs from the clean shortcut
+    assert float(jnp.max(jnp.abs(ys["dense"]
+                                 - rosa.rosa_matmul(x, w)))) > 1e-5
+    np.testing.assert_allclose(np.asarray(ys["dense"]), np.asarray(ys["ref"]),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(ys["dense"]),
+                               np.asarray(ys["pallas"]),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_no_boolean_kernel_toggle():
+    assert not hasattr(rosa.DEFAULT, "use_kernel")
+    assert rosa.DEFAULT.backend == "auto"
+
+
+# ---------------------------------------------------------------------------
+# Deterministic per-layer key folding
+# ---------------------------------------------------------------------------
+def test_key_folding_determinism(key):
+    k1, k2 = jax.random.split(key)
+    x = jax.random.normal(k1, (8, 32))
+    w = jax.random.normal(k2, (32, 8))
+    eng = rosa.Engine.from_config(NOISY, key=jax.random.PRNGKey(0))
+    y_a1 = eng.matmul(x, w, name="a")
+    y_a2 = eng.matmul(x, w, name="a")
+    np.testing.assert_array_equal(np.asarray(y_a1), np.asarray(y_a2))
+    # different layer name, different step, different base key -> new draws
+    assert float(jnp.max(jnp.abs(y_a1 - eng.matmul(x, w, name="b")))) > 1e-6
+    assert float(jnp.max(jnp.abs(
+        y_a1 - eng.matmul(x, w, name="a", step=1)))) > 1e-6
+    eng2 = eng.with_key(jax.random.PRNGKey(1))
+    assert float(jnp.max(jnp.abs(y_a1 - eng2.matmul(x, w, name="a")))) > 1e-6
+    # the folded key is exactly layer_key(base, name, step)
+    y_direct = rosa.rosa_matmul(
+        x, w, NOISY, rosa.layer_key(jax.random.PRNGKey(0), "a", 0))
+    np.testing.assert_array_equal(np.asarray(y_a1), np.asarray(y_direct))
+
+
+def test_engine_matmul_inside_jit(key):
+    eng = rosa.Engine.from_config(NOISY, key=jax.random.PRNGKey(0))
+    x = jax.random.normal(key, (4, 16))
+    w = jnp.ones((16, 4))
+    f = jax.jit(lambda x_, w_: eng.matmul(x_, w_, name="l"))
+    np.testing.assert_allclose(np.asarray(f(x, w)),
+                               np.asarray(eng.matmul(x, w, name="l")),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_dense_layers_bypass_optical(key):
+    eng = rosa.Engine.from_layer_cfgs({"opt": rosa.DEFAULT},
+                                      layers=("opt", "plain"))
+    x = jax.random.normal(key, (4, 8))
+    w = jnp.eye(8)
+    np.testing.assert_array_equal(
+        np.asarray(eng.matmul(x, w, name="plain")), np.asarray(x))
+    assert float(jnp.max(jnp.abs(
+        eng.matmul(x, w, name="opt") - x))) > 1e-6   # quantized path
+
+
+# ---------------------------------------------------------------------------
+# Ledger EDP == analytical plan EDP on a known 3-layer network
+# ---------------------------------------------------------------------------
+def test_ledger_edp_matches_plan_edp(key):
+    layers = [E.LayerShape("a", m=16, k=32, n=8, kind="gemm"),
+              E.LayerShape("b", m=16, k=8, n=24, kind="gemm"),
+              E.LayerShape("c", m=16, k=24, n=10, kind="gemm")]
+    plan = {"a": Mapping.IS, "c": Mapping.IS}          # "b" defaults to WS
+
+    ledger = rosa.EnergyLedger()
+    eng = rosa.Engine.from_hybrid_plan(
+        NOISY, plan, layers=[l.name for l in layers],
+        key=jax.random.PRNGKey(0), ledger=ledger)
+    x = jax.random.normal(key, (16, 32))
+    for l in layers:
+        w = jnp.ones((l.k, l.n)) * 0.1
+        x = eng.matmul(x, w, name=l.name)
+    assert x.shape == (16, 10)
+
+    edp_trace = ledger.edp(ROSA_OPTIMAL)
+    edp_analytical = M.plan_edp(layers, plan, ROSA_OPTIMAL, batch=1)
+    assert edp_trace == pytest.approx(edp_analytical, rel=1e-12)
+    assert ledger.mapping_plan() == {"a": Mapping.IS, "b": Mapping.WS,
+                                     "c": Mapping.IS}
+
+
+def test_ledger_dedupes_retraced_layers(key):
+    ledger = rosa.EnergyLedger()
+    eng = rosa.Engine.from_config(rosa.DEFAULT, ledger=ledger)
+    x = jax.random.normal(key, (4, 8))
+    w = jnp.ones((8, 8))
+    for _ in range(3):                      # MC loop re-routes the same layer
+        eng.matmul(x, w, name="l")
+    assert len(ledger.events) == 3
+    assert len(ledger.unique_events()) == 1
+    assert ledger.edp(ROSA_OPTIMAL) == pytest.approx(
+        E.layer_energy(E.LayerShape("l", 4, 8, 8, kind="gemm"),
+                       ROSA_OPTIMAL).edp, rel=1e-12)
+
+
+def test_ledger_records_at_trace_time(key):
+    """eval_shape populates the ledger without running any math."""
+    ledger = rosa.EnergyLedger()
+    eng = rosa.Engine.from_config(rosa.DEFAULT, ledger=ledger)
+    jax.eval_shape(lambda x_, w_: eng.matmul(x_, w_, name="l"),
+                   jax.ShapeDtypeStruct((6, 12), jnp.float32),
+                   jax.ShapeDtypeStruct((12, 3), jnp.float32))
+    assert [e.name for e in ledger.events] == ["l"]
+    assert (ledger.events[0].m, ledger.events[0].k,
+            ledger.events[0].n) == (6, 12, 3)
+
+
+# ---------------------------------------------------------------------------
+# MatmulBackend is a thin shim over the Engine
+# ---------------------------------------------------------------------------
+def test_matmul_backend_shim(key):
+    from repro.models.module import DENSE, MatmulBackend
+    x = jax.random.normal(key, (2, 3, 16))
+    w = jax.random.normal(jax.random.PRNGKey(1), (16, 8))
+    np.testing.assert_allclose(
+        np.asarray(DENSE.apply(x, w)),
+        np.asarray(jnp.einsum("...k,kn->...n", x, w)), rtol=1e-6)
+    mb = MatmulBackend(kind="rosa", rosa_cfg=NOISY, plan={"a": Mapping.IS})
+    assert mb.engine.config("a").mapping is Mapping.IS
+    assert mb.engine.config("other").mapping is Mapping.WS
+    k = jax.random.PRNGKey(3)
+    np.testing.assert_array_equal(
+        np.asarray(mb.apply(x, w, name="a", key=k)),
+        np.asarray(rosa.rosa_matmul(
+            x, w, dataclasses.replace(NOISY, mapping=Mapping.IS), k)))

@@ -18,8 +18,10 @@ def test_flops_match_cost_analysis_no_loops(key):
     w = jax.ShapeDtypeStruct((128, 256), jnp.float32)
     comp = _compile(f, x, w)
     rep = analyze(comp.as_text())
-    xla = comp.cost_analysis()["flops"]
-    assert rep.flops == pytest.approx(xla, rel=0.05)
+    ca = comp.cost_analysis()
+    if isinstance(ca, list):      # pre-0.5 jax returns [per-device dict]
+        ca = ca[0]
+    assert rep.flops == pytest.approx(ca["flops"], rel=0.05)
 
 
 def test_scan_trip_count_multiplies():
@@ -47,8 +49,9 @@ def test_collectives_detected_in_psum():
     def f(x):
         return jax.lax.psum(x * 2.0, "d")
 
-    g = jax.jit(jax.shard_map(f, mesh=mesh, in_specs=P("d"),
-                              out_specs=P()))
+    from repro.distributed.sharding import shard_map_compat
+    g = jax.jit(shard_map_compat(f, mesh=mesh, in_specs=P("d"),
+                                 out_specs=P()))
     comp = g.lower(jax.ShapeDtypeStruct((16,), jnp.float32)).compile()
     rep = analyze(comp.as_text())
     # single-device psum may be optimised away; just assert no crash and

@@ -106,11 +106,12 @@ def test_moe_ep_equals_ref(key):
     y_ref = moe_ref(params, cfg, x)
     mesh = jax.make_mesh((1, 1), ("data", "model"))
     from jax.sharding import PartitionSpec as P
-    y_ep = jax.shard_map(
+    from repro.distributed.sharding import shard_map_compat
+    y_ep = shard_map_compat(
         lambda p, xl: moe_ep_local(p, cfg, x_local=xl, fsdp_axes=()),
         mesh=mesh,
         in_specs=(jax.tree.map(lambda _: P(), params), P()),
-        out_specs=P(), check_vma=False)(params, x)
+        out_specs=P())(params, x)
     np.testing.assert_allclose(np.asarray(y_ref), np.asarray(y_ep),
                                rtol=2e-3, atol=2e-3)
 

@@ -1,17 +1,21 @@
-"""Quantization / signed-digit plane invariants (hypothesis-driven)."""
+"""Quantization / signed-digit plane invariants (hypothesis-driven, with a
+fixed-sample parametrized fallback when hypothesis is not installed)."""
 
-import hypothesis as hp
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+try:
+    import hypothesis as hp
+    import hypothesis.strategies as st
+except ModuleNotFoundError:
+    hp = st = None
 
 from repro.core import quant as Q
 
 
-@hp.given(st.integers(2, 8), st.integers(0, 2 ** 31 - 1))
-@hp.settings(max_examples=40, deadline=None)
-def test_plane_roundtrip_exact(bits, seed):
+def _check_plane_roundtrip(bits: int, seed: int) -> None:
     cfg = Q.QuantConfig(bits=bits)
     q = jax.random.randint(jax.random.PRNGKey(seed), (32,),
                            -cfg.qmax, cfg.qmax + 1).astype(jnp.float32)
@@ -22,10 +26,7 @@ def test_plane_roundtrip_exact(bits, seed):
                                   np.asarray(q))
 
 
-@hp.given(st.integers(2, 8), st.sampled_from([1, 2, 3, 4]),
-          st.integers(0, 2 ** 31 - 1))
-@hp.settings(max_examples=40, deadline=None)
-def test_pam_roundtrip_exact(bits, pam_bits, seed):
+def _check_pam_roundtrip(bits: int, pam_bits: int, seed: int) -> None:
     cfg = Q.QuantConfig(bits=bits)
     q = jax.random.randint(jax.random.PRNGKey(seed), (16,),
                            -cfg.qmax, cfg.qmax + 1).astype(jnp.float32)
@@ -35,14 +36,45 @@ def test_pam_roundtrip_exact(bits, pam_bits, seed):
         np.asarray(Q.compose_pam(digits, pam_bits, cfg)), np.asarray(q))
 
 
-@hp.given(st.integers(0, 2 ** 31 - 1))
-@hp.settings(max_examples=20, deadline=None)
-def test_quantize_bounds_and_scale(seed):
+def _check_quantize_bounds(seed: int) -> None:
     x = jax.random.normal(jax.random.PRNGKey(seed), (64,)) * 10
     q, scale = Q.quantize(x)
     assert float(jnp.max(jnp.abs(q))) <= 127
     err = jnp.max(jnp.abs(Q.dequantize(q, scale) - x))
     assert float(err) <= float(scale) / 127 * 0.5 + 1e-6
+
+
+if hp is not None:
+    @hp.given(st.integers(2, 8), st.integers(0, 2 ** 31 - 1))
+    @hp.settings(max_examples=40, deadline=None)
+    def test_plane_roundtrip_exact(bits, seed):
+        _check_plane_roundtrip(bits, seed)
+
+    @hp.given(st.integers(2, 8), st.sampled_from([1, 2, 3, 4]),
+              st.integers(0, 2 ** 31 - 1))
+    @hp.settings(max_examples=40, deadline=None)
+    def test_pam_roundtrip_exact(bits, pam_bits, seed):
+        _check_pam_roundtrip(bits, pam_bits, seed)
+
+    @hp.given(st.integers(0, 2 ** 31 - 1))
+    @hp.settings(max_examples=20, deadline=None)
+    def test_quantize_bounds_and_scale(seed):
+        _check_quantize_bounds(seed)
+else:
+    @pytest.mark.parametrize("bits", range(2, 9))
+    @pytest.mark.parametrize("seed", [0, 7, 12345])
+    def test_plane_roundtrip_exact(bits, seed):
+        _check_plane_roundtrip(bits, seed)
+
+    @pytest.mark.parametrize("bits", [2, 3, 5, 8])
+    @pytest.mark.parametrize("pam_bits", [1, 2, 3, 4])
+    @pytest.mark.parametrize("seed", [0, 99])
+    def test_pam_roundtrip_exact(bits, pam_bits, seed):
+        _check_pam_roundtrip(bits, pam_bits, seed)
+
+    @pytest.mark.parametrize("seed", [0, 1, 2, 41, 1337])
+    def test_quantize_bounds_and_scale(seed):
+        _check_quantize_bounds(seed)
 
 
 def test_fake_quant_idempotent(key):
