@@ -9,8 +9,6 @@ Paper claims: OSA -29% EDP, OSA+ODE sizing -37% vs the no-OSA baseline.
 
 from __future__ import annotations
 
-import math
-
 from repro.configs.paper_cnns import WORKLOADS
 from repro.core import energy as E
 from repro.core.constants import ROSA_OPTIMAL

@@ -1,89 +1,309 @@
-"""Benchmark aggregator: one entry per paper table/figure.
+"""Structured benchmark runner: one entry per paper table/figure.
 
-Prints ``name,seconds,derived`` CSV rows.  The heavyweight behavioural
-benchmark (table4) runs in quick mode here; invoke it directly for the
-full four-model version used in EXPERIMENTS.md.
+Every bench returns typed `Metric`s (deterministic analytic numbers gate
+the CI regression check; stochastic tiny-step accuracies and wall times are
+recorded ungated).  Failures are caught per-bench, recorded as
+``status: failed``, and surface as a non-zero exit AFTER the summary — one
+broken bench no longer aborts the aggregator.
 
-    PYTHONPATH=src python -m benchmarks.run [--full]
+    PYTHONPATH=src python -m benchmarks.run [--full] [--json] [--only ...]
+
+``--json`` serializes the run as a schema-valid ``BENCH_<n>.json`` at the
+repo root (`repro.bench.schema`); gate it against the committed baseline
+with ``python -m repro.bench.compare benchmarks/baseline.json BENCH_<n>.json``.
 """
 
 from __future__ import annotations
 
 import argparse
+import datetime
+import platform
+import re
+import sys
 import time
+import traceback
+from pathlib import Path
+
+from repro.bench.schema import (BenchReport, BenchResult, Metric,
+                                next_bench_path, save)
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
 
 
-def main() -> None:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--full", action="store_true")
-    args = ap.parse_args()
+class SkipBench(Exception):
+    """Raised by a bench to record ``status: skipped`` (with a reason)."""
 
-    rows = []
 
-    def bench(name, fn):
+# ---------------------------------------------------------------------------
+# Benches — each returns list[Metric]
+# ---------------------------------------------------------------------------
+def bench_table1_modes(quick: bool) -> list[Metric]:
+    from benchmarks import table1_modes
+    r = table1_modes.run(verbose=False)
+    return [
+        Metric("ops_mixed_vs_analog", r["mixed"]["ops"] / r["analog"]["ops"],
+               unit="x", gate=True, rel_tol=1e-3),
+        Metric("mixed_edp", r["mixed"]["edp"], unit="J*s",
+               gate=True, rel_tol=1e-3, direction="lower_is_better"),
+        Metric("mixed_oadc_energy", r["mixed"]["oadc_energy"], unit="J",
+               gate=True, rel_tol=1e-3, direction="lower_is_better"),
+    ]
+
+
+def bench_fig7_array_dse(quick: bool) -> list[Metric]:
+    from benchmarks import fig7_array_dse
+    r = fig7_array_dse.run(verbose=False)
+    return [
+        Metric("best_config", r["best"].label, gate=True),
+        Metric("reduction_vs_deap", r["reduction_vs_deap"], unit="frac",
+               gate=True, rel_tol=0.01, direction="higher_is_better"),
+        Metric("reduction_vs_compact", r["reduction_vs_compact"],
+               unit="frac", gate=True, rel_tol=0.01,
+               direction="higher_is_better"),
+    ]
+
+
+def bench_fig8_osa(quick: bool) -> list[Metric]:
+    from benchmarks import fig8_osa
+    r = fig8_osa.run(verbose=False)
+    return [
+        Metric("geomean_reduction_osa", r["geomean_reduction_osa"],
+               unit="frac", gate=True, rel_tol=0.01,
+               direction="higher_is_better"),
+        Metric("geomean_reduction_osa_ode", r["geomean_reduction_osa_ode"],
+               unit="frac", gate=True, rel_tol=0.01,
+               direction="higher_is_better"),
+    ]
+
+
+def bench_fig9_power_breakdown(quick: bool) -> list[Metric]:
+    from benchmarks import fig9_power_breakdown
+    r = fig9_power_breakdown.run(verbose=False)
+    alex = r["alexnet"]
+    adc_red = 1 - alex["osa"]["adc"] / alex["no_osa"]["adc"]
+    return [
+        Metric("n_workloads", len(r), gate=True, rel_tol=0.0),
+        Metric("alexnet_adc_power_reduction", adc_red, unit="frac",
+               gate=True, rel_tol=0.01, direction="higher_is_better"),
+    ]
+
+
+def bench_dse_zoo(quick: bool) -> list[Metric]:
+    """Grid x model-zoo cross-product through the vmapped DSE engine."""
+    from repro.configs import get_workload_zoo
+    from repro.core import dse
+
+    wls = get_workload_zoo()
+    t0 = time.time()
+    pts = dse.sweep(wls, engine="vmap", batch=8)
+    dt = time.time() - t0
+    return [
+        Metric("n_workloads", len(wls), gate=True, rel_tol=0.0),
+        Metric("n_layer_rows", sum(len(w.layers) for w in wls),
+               gate=True, rel_tol=0.0),
+        Metric("n_candidates", len(pts), gate=True, rel_tol=0.0),
+        Metric("best_config", pts[0].label, gate=True),
+        Metric("best_metric", pts[0].metric, gate=True, rel_tol=0.01,
+               direction="lower_is_better"),
+        Metric("sweep_wall_s", dt, unit="s"),
+    ]
+
+
+def bench_hybrid_zoo(quick: bool) -> list[Metric]:
+    """EDP-only hybrid-mapping search on zoo architectures (accuracy term
+    muted — no behavioural twin for the LLM stacks)."""
+    from repro.configs import get_workload_zoo
+    from repro.core import mapping as M
+    from repro.core.constants import Mapping, ROSA_OPTIMAL
+
+    archs = ["qwen3-32b", "mamba2-1.3b"] if quick else \
+        ["qwen3-32b", "mamba2-1.3b", "gemma3-12b", "zamba2-1.2b",
+         "seamless-m4t-medium"]
+    out = []
+    for wl in get_workload_zoo(include_paper=False, archs=archs):
+        profs = M.profile_layers_fast(wl.layers, ROSA_OPTIMAL, batch=8)
+        plan = M.hybrid_plan(profs)
+        e_h = M.plan_edp(wl.layers, plan, ROSA_OPTIMAL, batch=8)
+        e_ws = M.plan_edp(wl.layers,
+                          {p.name: Mapping.WS for p in profs},
+                          ROSA_OPTIMAL, batch=8)
+        out.append(Metric(f"{wl.name}_hybrid_vs_ws_edp", e_h / e_ws,
+                          unit="ratio", gate=True, rel_tol=0.01,
+                          direction="lower_is_better"))
+    return out
+
+
+def bench_ledger_trace(quick: bool) -> list[Metric]:
+    """Trace-based EDP: the lite CNN re-traced through an Engine with an
+    `EnergyLedger` attached (shapes only — deterministic, no training)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro import rosa
+    from repro.core.constants import ROSA_OPTIMAL
+    from repro.models.cnn import LITE_MODELS, LITE_SKIPS, cnn_apply, cnn_def
+    from repro.models.module import abstract_params
+    from repro.training.cnn_train import QAT_CFG
+
+    specs = LITE_MODELS["alexnet"]
+    ledger = rosa.EnergyLedger()
+    engine = rosa.Engine.from_config(
+        QAT_CFG, layers=[s.name for s in specs],
+        key=jax.random.PRNGKey(0), ledger=ledger)
+    skel = abstract_params(cnn_def(specs), dtype=jnp.float32)
+    jax.eval_shape(
+        lambda p, x: cnn_apply(p, specs, x, engine,
+                               residual_from=LITE_SKIPS.get("alexnet")),
+        skel, jax.ShapeDtypeStruct((8, 32, 32, 3), jnp.float32))
+    export = ledger.export(ROSA_OPTIMAL)
+    return [
+        Metric("n_traced_matmuls", len(export["events"]),
+               gate=True, rel_tol=0.0),
+        Metric("trace_edp", export["totals"]["edp"], unit="J*s",
+               gate=True, rel_tol=1e-3, direction="lower_is_better"),
+        Metric("trace_energy", export["totals"]["energy"], unit="J",
+               gate=True, rel_tol=1e-3, direction="lower_is_better"),
+    ]
+
+
+def bench_table4_hybrid(quick: bool) -> list[Metric]:
+    from benchmarks import table4_hybrid
+    models = ["alexnet"] if quick else None
+    res = table4_hybrid.run(models=models,
+                            steps=60 if quick else 400,
+                            n_mc=1 if quick else 3, verbose=False)
+    # accuracies are already percentages (evaluate_cnn); tiny-step training
+    # numbers are stochastic -> recorded, never gated
+    gain = sum(r["accs"]["hybrid"] - r["accs"]["ws"]
+               for r in res.values()) / len(res)
+    return [
+        Metric("hybrid_vs_ws_pp", gain, unit="pp"),
+        Metric("n_models", len(res), gate=True, rel_tol=0.0),
+    ]
+
+
+def bench_roofline(quick: bool) -> list[Metric]:
+    from benchmarks import roofline as R
+    rows = [d for r in R.load("results/dryrun", "single")
+            if (d := R.derive(r))]
+    if not rows:
+        raise SkipBench("no dryrun records under results/dryrun")
+    dom: dict[str, int] = {}
+    for d in rows:
+        dom[d["dominant"]] = dom.get(d["dominant"], 0) + 1
+    return [Metric("n_cells", len(rows)),
+            Metric("dominant_mix", str(sorted(dom.items())))]
+
+
+BENCHES: dict[str, callable] = {
+    "table1_modes": bench_table1_modes,
+    "fig7_array_dse": bench_fig7_array_dse,
+    "fig8_osa": bench_fig8_osa,
+    "fig9_power_breakdown": bench_fig9_power_breakdown,
+    "dse_zoo": bench_dse_zoo,
+    "hybrid_zoo": bench_hybrid_zoo,
+    "ledger_trace": bench_ledger_trace,
+    "table4_hybrid": bench_table4_hybrid,
+    "roofline": bench_roofline,
+}
+
+
+# ---------------------------------------------------------------------------
+# Runner
+# ---------------------------------------------------------------------------
+def run_benches(names: list[str], quick: bool) -> list[BenchResult]:
+    results = []
+    for name in names:
         t0 = time.time()
-        derived = fn()
-        dt = time.time() - t0
-        rows.append((name, dt, derived))
-        print(f"\n>>> {name},{dt:.1f}s,{derived}\n", flush=True)
+        try:
+            metrics = BENCHES[name](quick)
+            res = BenchResult(name=name, status="ok",
+                              wall_s=time.time() - t0, metrics=metrics)
+        except SkipBench as e:
+            res = BenchResult(name=name, status="skipped",
+                              wall_s=time.time() - t0, error=str(e))
+        except Exception:
+            res = BenchResult(name=name, status="failed",
+                              wall_s=time.time() - t0,
+                              error=traceback.format_exc(limit=8))
+        results.append(res)
+        tag = {"ok": "", "skipped": " [skipped]",
+               "failed": " [FAILED]"}[res.status]
+        detail = "; ".join(f"{m.name}={m.value:.4g}"
+                           if isinstance(m.value, float) else
+                           f"{m.name}={m.value}" for m in res.metrics)
+        print(f">>> {name}{tag} ({res.wall_s:.1f}s) {detail}", flush=True)
+        if res.status == "failed":
+            print(res.error, file=sys.stderr, flush=True)
+    return results
 
-    from benchmarks import (fig7_array_dse, fig8_osa, fig9_power_breakdown,
-                            table1_modes)
 
-    def table1():
-        r = table1_modes.run()
-        return "%.1fx_ops_mixed_vs_analog" % (r["mixed"]["ops"]
-                                              / r["analog"]["ops"])
+def build_report(results: list[BenchResult], quick: bool,
+                 seq: int) -> BenchReport:
+    import jax
+    return BenchReport(
+        bench_seq=seq,
+        mode="quick" if quick else "full",
+        created_utc=datetime.datetime.now(datetime.timezone.utc)
+        .strftime("%Y-%m-%dT%H:%M:%SZ"),
+        env={"python": platform.python_version(), "jax": jax.__version__,
+             "platform": platform.platform()},
+        results=results)
 
-    bench("table1_modes", table1)
 
-    def fig7():
-        r = fig7_array_dse.run()
-        return "best=%s;vs_deap=%.1f%%;vs_4x4=%.1f%%" % (
-            r["best"].label, r["reduction_vs_deap"] * 100,
-            r["reduction_vs_compact"] * 100)
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--full", action="store_true",
+                    help="full-size benches (default: quick mode)")
+    ap.add_argument("--quick", action="store_true",
+                    help="quick mode (the default; flag kept for CI "
+                         "explicitness)")
+    ap.add_argument("--json", action="store_true",
+                    help="write BENCH_<n>.json at the repo root")
+    ap.add_argument("--out", default=None, metavar="PATH",
+                    help="override the --json output path")
+    ap.add_argument("--seq", type=int, default=None,
+                    help="explicit <n> for BENCH_<n>.json")
+    ap.add_argument("--only", nargs="+", default=None,
+                    choices=sorted(BENCHES),
+                    help="run only these benches")
+    ap.add_argument("--list", action="store_true", help="list benches")
+    args = ap.parse_args(argv)
+    if args.list:
+        print("\n".join(BENCHES))
+        return 0
+    if args.full and args.quick:
+        ap.error("--quick and --full are mutually exclusive")
 
-    bench("fig7_array_dse", fig7)
-
-    def fig8():
-        r = fig8_osa.run()
-        return "osa=%.1f%%;osa_ode=%.1f%%" % (
-            r["geomean_reduction_osa"] * 100,
-            r["geomean_reduction_osa_ode"] * 100)
-
-    bench("fig8_osa", fig8)
-    bench("fig9_power_breakdown",
-          lambda: "workloads=%d" % len(fig9_power_breakdown.run()))
-
-    def table4():
-        from benchmarks import table4_hybrid
-        models = None if args.full else ["alexnet"]
-        steps = 400 if args.full else 250
-        res = table4_hybrid.run(models=models, steps=steps,
-                                n_mc=3 if args.full else 2)
-        return "hybrid_vs_ws=%+.1fpp" % (
-            sum(r["accs"]["hybrid"] - r["accs"]["ws"]
-                for r in res.values()) / len(res))
-
-    bench("table4_hybrid" + ("" if args.full else "_quick"), table4)
-
-    def roofline():
-        from benchmarks import roofline as R
-        rows_ = [d for r in R.load("results/dryrun", "single")
-                 if (d := R.derive(r))]
-        if not rows_:
-            return "no_dryrun_records"
-        dom = {}
-        for d in rows_:
-            dom[d["dominant"]] = dom.get(d["dominant"], 0) + 1
-        return "cells=%d;%s" % (len(rows_), dom)
-
-    bench("roofline_table", roofline)
+    quick = not args.full
+    names = args.only if args.only else list(BENCHES)
+    results = run_benches(names, quick)
 
     print("\n== summary ==")
-    for name, dt, derived in rows:
-        print(f"{name},{dt:.1f}s,{derived}")
+    for r in results:
+        print(f"{r.name},{r.status},{r.wall_s:.1f}s,"
+              + ";".join(f"{m.name}={m.value}" for m in r.metrics))
+
+    if args.json or args.out:
+        path = Path(args.out) if args.out \
+            else next_bench_path(REPO_ROOT, args.seq)
+        # embedded seq must agree with the file written: explicit --seq
+        # wins, else the BENCH_<n>.json filename, else the next repo-root
+        # trajectory slot (custom --out names like BENCH_ci.json)
+        seq = args.seq
+        if seq is None:
+            m = re.match(r"BENCH_(\d+)\.json$", path.name)
+            seq = int(m.group(1)) if m \
+                else int(next_bench_path(REPO_ROOT).stem.split("_")[1])
+        save(build_report(results, quick, seq), path)
+        print(f"\nwrote {path}")
+
+    failed = [r.name for r in results if r.status == "failed"]
+    if failed:
+        print(f"\nFAILED benches: {', '.join(failed)}", file=sys.stderr)
+        return 1
+    return 0
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

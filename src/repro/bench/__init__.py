@@ -1,0 +1,44 @@
+"""Machine-readable benchmark harness.
+
+`benchmarks/run.py` executes the paper table/figure benches and serializes
+one `BenchReport` per run as ``BENCH_<n>.json`` at the repo root; this
+package owns the schema (`repro.bench.schema`) and the regression gate
+(`repro.bench.compare`, also a CLI: ``python -m repro.bench.compare``).
+
+    from repro import bench
+    report = bench.load("BENCH_2.json")
+    verdict = bench.compare_reports(baseline, report)
+    sys.exit(0 if verdict.ok else 1)
+"""
+
+from repro.bench.schema import (SCHEMA_VERSION, BenchReport, BenchResult,
+                                Metric, load, next_bench_path, save, validate)
+
+# The submodule is named `compare` and so is its main function.  Its names
+# are re-exported lazily (PEP 562) so `repro.bench.compare` keeps resolving
+# to the module and `python -m repro.bench.compare` doesn't warn about the
+# package pre-importing its own CLI module.
+_COMPARE_EXPORTS = {"CompareResult": "CompareResult",
+                    "MetricVerdict": "MetricVerdict",
+                    "compare_reports": "compare"}
+
+
+def __getattr__(name: str):
+    if name in _COMPARE_EXPORTS:
+        from repro.bench import compare as _compare
+        return getattr(_compare, _COMPARE_EXPORTS[name])
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+__all__ = [
+    "SCHEMA_VERSION",
+    "BenchReport",
+    "BenchResult",
+    "CompareResult",
+    "Metric",
+    "MetricVerdict",
+    "compare_reports",
+    "load",
+    "next_bench_path",
+    "save",
+    "validate",
+]

@@ -49,3 +49,12 @@ def get_config(name: str):
 
 def get_smoke(name: str):
     return _module(name).SMOKE
+
+
+def get_workload_zoo(**kw):
+    """GEMM-lowered DSE workloads: paper CNNs + every registry arch.
+
+    Lazy import — `model_zoo` pulls in the model stacks (jax-heavy), which
+    plain config lookups should not pay for."""
+    from repro.configs.model_zoo import zoo_workloads
+    return zoo_workloads(**kw)

@@ -37,8 +37,8 @@ from repro.launch import hlo_analysis  # noqa: E402
 from repro.launch.mesh import make_production_mesh  # noqa: E402
 from repro.launch.steps import (init_opt_state, make_train_step,  # noqa: E402
                                 opt_state_shardings)
-from repro.models.model import (ASSIGNED_SHAPES, ModelBundle,  # noqa: E402
-                                applicable, build_model)
+from repro.models.model import (ASSIGNED_SHAPES, applicable,  # noqa: E402
+                                build_model)
 from repro.optim import AdamWConfig  # noqa: E402
 
 

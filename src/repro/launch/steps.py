@@ -2,11 +2,7 @@
 
 from __future__ import annotations
 
-import functools
-from typing import Any
-
 import jax
-import jax.numpy as jnp
 
 from repro.distributed import compress as C
 from repro.models.model import ModelBundle

@@ -23,7 +23,6 @@ import dataclasses
 import time
 
 import jax
-import jax.numpy as jnp
 
 from repro.checkpoint import CheckpointManager, restore
 from repro.configs import get_config, get_smoke

@@ -35,7 +35,7 @@ from repro.models import layers as L
 from repro.models import mla as MLA
 from repro.models import moe as MOE
 from repro.models import ssm as SSM
-from repro.models.module import ParamDef, merge
+from repro.models.module import ParamDef
 
 
 # ---------------------------------------------------------------------------

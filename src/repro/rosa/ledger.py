@@ -102,3 +102,24 @@ class EnergyLedger:
         """Energy-delay product [J*s] of the recorded trace; equals
         core.mapping.plan_edp on the same layers/plan by construction."""
         return self.breakdown(ope, osa, batch=batch, dedupe=dedupe).edp
+
+    def export(self, ope: OPEConfig,
+               osa: E.OSAEnergyConfig = E.OSA_OPTIMAL,
+               batch: int = 1) -> dict:
+        """JSON-serializable view of the priced trace for BENCH reports.
+
+        One object per unique routed matmul plus the network totals — what
+        `benchmarks/run.py` embeds so offline tooling can re-aggregate EDP
+        without replaying the trace."""
+        bd = self.breakdown(ope, osa, batch=batch)
+        return {
+            "ope": {"rows": ope.rows, "cols": ope.cols, "tiles": ope.tiles},
+            "batch": batch,
+            "events": [
+                {"name": ev.name, "m": ev.m, "k": ev.k, "n": ev.n,
+                 "mapping": ev.mapping.value, "mode": ev.mode.value,
+                 "backend": ev.backend}
+                for ev in self.unique_events()
+            ],
+            "totals": bd.as_dict(),
+        }

@@ -1,6 +1,5 @@
 """Deterministic data pipelines (fault-tolerance property)."""
 
-import jax
 import numpy as np
 
 from repro.data import TokenPipeline, synth_cifar

@@ -12,7 +12,7 @@ from repro import rosa
 from repro.core import energy as E
 from repro.core import mapping as M
 from repro.core import mrr
-from repro.core.constants import ComputeMode, Mapping, ROSA_OPTIMAL
+from repro.core.constants import Mapping, ROSA_OPTIMAL
 
 NOISY = rosa.RosaConfig(noise=mrr.PAPER_NOISE)
 

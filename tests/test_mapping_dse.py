@@ -6,9 +6,8 @@ import pytest
 
 from repro.configs.paper_cnns import CNN_WORKLOADS, WORKLOADS
 from repro.core import dse, mapping
-from repro.core.constants import (COMPACT_4X4, DEAP_HIGH_CHANNEL, Mapping,
-                                  MAX_TOTAL_MRRS, MAX_WDM_CHANNELS,
-                                  ROSA_OPTIMAL)
+from repro.core.constants import (COMPACT_4X4, Mapping, MAX_TOTAL_MRRS,
+                                  MAX_WDM_CHANNELS)
 
 
 def test_alpha_layer_adaptive():
@@ -56,7 +55,7 @@ def test_dse_winner_beats_deap_and_compact():
     pts = dse.sweep(wls)
     best = pts[0]
     by_label = {p.label: p for p in pts}
-    deap = by_label[f"R=113,C=9,T=1"]
+    deap = by_label["R=113,C=9,T=1"]
     compact = [p for p in pts if p.ope == COMPACT_4X4][0]
     assert best.metric < deap.metric
     assert best.metric < compact.metric

@@ -1,7 +1,5 @@
 """Optical shift-and-add semantics (paper Eqs. 1-2, Sec. 3.1)."""
 
-import dataclasses
-
 import jax
 import jax.numpy as jnp
 import numpy as np

@@ -2,7 +2,6 @@
 
 import types
 
-import pytest
 from jax.sharding import PartitionSpec as P
 
 from repro.distributed.sharding import SERVE_RULES, TRAIN_RULES, resolve_spec
