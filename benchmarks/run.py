@@ -182,6 +182,28 @@ def bench_table4_hybrid(quick: bool) -> list[Metric]:
     ]
 
 
+def bench_robust_smoke(quick: bool) -> list[Metric]:
+    """repro.robust end-to-end: N-chip wafer statistics (one jitted vmapped
+    call) + vectorized sensitivity profiling -> accuracy-aware hybrid plan
+    evaluated against pure WS on the same ensemble (paper Table-4
+    direction: hybrid acc >= WS acc at lower EDP).  Fixed seeds: the gated
+    yield/accuracy numbers are deterministic on the pinned CI stack."""
+    import dataclasses as dc
+
+    from repro.robust import cli as rcli
+    from repro.training.cnn_train import train_cnn
+
+    params, _ = train_cnn("alexnet", steps=120 if quick else 400)
+    _, m_ens = rcli.run_ensemble(
+        "alexnet", params=params, n_chips=16 if quick else 64,
+        n_eval=256 if quick else 512)
+    _, m_sen = rcli.run_sensitivity(
+        "alexnet", params=params, n_chips=8 if quick else 16,
+        n_eval=128 if quick else 256)
+    return ([dc.replace(m, name=f"ens_{m.name}") for m in m_ens]
+            + [dc.replace(m, name=f"sens_{m.name}") for m in m_sen])
+
+
 def bench_roofline(quick: bool) -> list[Metric]:
     from benchmarks import roofline as R
     rows = [d for r in R.load("results/dryrun", "single")
@@ -204,6 +226,7 @@ BENCHES: dict[str, callable] = {
     "hybrid_zoo": bench_hybrid_zoo,
     "ledger_trace": bench_ledger_trace,
     "table4_hybrid": bench_table4_hybrid,
+    "robust_smoke": bench_robust_smoke,
     "roofline": bench_roofline,
 }
 

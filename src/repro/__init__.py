@@ -4,6 +4,8 @@ Layers:
   core/         the paper's contribution (physics, OSA, energy, mapping, DSE)
   rosa/         the execution-plan API: Engine, ExecutionPlan, backend
                 registry (dense/ref/pallas), trace-based EnergyLedger
+  robust/       vectorized Monte-Carlo device variation: chip ensembles,
+                sensitivity profiling, thermal drift + re-trim, reports
   kernels/      Pallas TPU kernels for the compute hot spots (+ jnp oracles)
   models/       pure-JAX model zoo (LM fleet + paper CNN families)
   configs/      assigned architecture configs + paper workload tables

@@ -73,8 +73,20 @@ def choose_mapping(p: LayerProfile) -> Mapping:
 
 
 def hybrid_plan(profiles: Sequence[LayerProfile]) -> dict[str, Mapping]:
-    """The paper's layer-wise hybrid mapping plan."""
+    """The paper's layer-wise hybrid mapping plan (pure balanced-metric
+    argmin).  Single-layer degradations under-estimate full-plan cost when
+    noise compounds across layers — `repro.robust.sensitivity` provides
+    the Monte-Carlo-verified search (`searched_hybrid_plan`) that
+    guarantees the chosen plan matches-or-beats pure WS on a chip
+    ensemble."""
     return {p.name: choose_mapping(p) for p in profiles}
+
+
+def degradation_fn_from_matrix(deg) -> Callable[[str, Mapping], float]:
+    """Adapt a `{layer: {mapping.value: pp}}` degradation matrix (the
+    output of `repro.robust.sensitivity.degradation_matrix`) to the
+    `degradation_fn(name, mapping)` callback the profilers take."""
+    return lambda name, m: deg[name][m.value]
 
 
 def profile_layers(layers: Sequence[E.LayerShape],

@@ -11,10 +11,19 @@ and the two noise injection points of Eq. (8):
     V' = V + eps_DAC,          eps_DAC ~ N(0, sigma_DAC^2)
     dT' = dT(V') + eps_th,     eps_th  ~ N(0, sigma_th^2)
 
+On top of the per-shot draws, a chip carries *per-device static* variation
+(`StaticVariation`): driver/DAC offset dv [V], thermal-crosstalk bias
+ddt [K], and fab mismatch of the resonance dlam [nm].  These are drawn ONCE
+per fabricated chip (see `repro.robust.variation`) and enter the same chain
+deterministically:
+
+    V'' = V' + dv,   dT'' = dT(V'') + eps_th + ddt,
+    lam = lambda_0 + dlam + delta_lambda(dT'')
+
 Everything is pure jnp and differentiable; `realize_weights` is the
 user-facing op: target weights -> programming voltages -> noisy realized
 weights.  A straight-through variant for noise-aware training lives in
-`onn_linear.py`.
+`rosa.backends`.
 """
 
 from __future__ import annotations
@@ -67,6 +76,35 @@ class NoiseModel:
 
 IDEAL = NoiseModel(sigma_dac=0.0, sigma_th=0.0)
 PAPER_NOISE = NoiseModel()
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class StaticVariation:
+    """Per-device (per-chip) static perturbation of the physical chain.
+
+    Leaves are arrays broadcastable against the realized tensor: scalars
+    (whole-layer bias), per-reduction-lane vectors of shape (K,) (one entry
+    per physical ring lane — the array tile is reused across output
+    channels, so lane mismatch correlates along N), or full elementwise
+    fields.  Sampled once per chip by `repro.robust.variation`.
+    """
+
+    dv: jax.Array      # static driver/DAC voltage offset [V]
+    ddt: jax.Array     # static thermal-crosstalk temperature bias [K]
+    dlam: jax.Array    # fab mismatch of the resonance wavelength [nm]
+
+    @classmethod
+    def zero(cls) -> "StaticVariation":
+        z = jnp.zeros(())
+        return cls(dv=z, ddt=z, dlam=z)
+
+    def scale(self, s) -> "StaticVariation":
+        return StaticVariation(self.dv * s, self.ddt * s, self.dlam * s)
+
+    def shift_ddt(self, offset) -> "StaticVariation":
+        """Add a (scalar) thermal offset — the drift injection point."""
+        return dataclasses.replace(self, ddt=self.ddt + offset)
 
 
 # --------------------------------------------------------------------------
@@ -131,11 +169,14 @@ def transmission_endpoints_py(p: MRRParams = DEFAULT_PARAMS) -> tuple[float, flo
 
 
 def weight_of_voltage(v, p: MRRParams = DEFAULT_PARAMS, noise: NoiseModel = IDEAL,
-                      key: jax.Array | None = None):
+                      key: jax.Array | None = None,
+                      var: StaticVariation | None = None):
     """Full chain Eqs. (3)-(8): drive voltage(s) -> realized weight(s).
 
     With a non-ideal `noise` model, `key` must be provided; two independent
-    Gaussian draws perturb V (DAC) and dT (thermal crosstalk).
+    Gaussian draws perturb V (DAC) and dT (thermal crosstalk).  `var` adds
+    a chip's static perturbation (driver offset, thermal bias, fab
+    mismatch) on top of the per-shot draws.
     """
     v = jnp.asarray(v)
     if not noise.is_ideal:
@@ -143,10 +184,20 @@ def weight_of_voltage(v, p: MRRParams = DEFAULT_PARAMS, noise: NoiseModel = IDEA
             raise ValueError("noisy realization requires a PRNG key")
         k_dac, k_th = jax.random.split(key)
         v = v + noise.sigma_dac * jax.random.normal(k_dac, v.shape, v.dtype)
-        dt = delta_t(v, p) + noise.sigma_th * jax.random.normal(k_th, v.shape, v.dtype)
+        eps_th = noise.sigma_th * jax.random.normal(k_th, v.shape, v.dtype)
     else:
-        dt = delta_t(v, p)
-    lam = p.lambda_0 + delta_lambda(dt, p)
+        eps_th = 0.0
+    if var is not None:
+        v = v + var.dv
+    dt = delta_t(v, p) + eps_th
+    dl = 0.0
+    if var is not None:
+        dt = dt + var.ddt
+        dl = var.dlam
+    # accumulate the small detuning terms BEFORE adding the ~1538 nm
+    # resonance constant: float32 rounding of lambda_0 + dlam alone would
+    # already move the Lorentzian by ~1e-4 nm
+    lam = p.lambda_0 + (delta_lambda(dt, p) + dl)
     td = t_diff(lam, p)
     t_hi, t_lo = transmission_endpoints(p)
     return p.q_min + p.q_rng * (td - t_lo) / (t_hi - t_lo)   # Eq. (7)
@@ -155,7 +206,7 @@ def weight_of_voltage(v, p: MRRParams = DEFAULT_PARAMS, noise: NoiseModel = IDEA
 # --------------------------------------------------------------------------
 # Inverse chain  w -> V  (programming)
 # --------------------------------------------------------------------------
-def voltage_of_weight(w, p: MRRParams = DEFAULT_PARAMS):
+def voltage_of_weight(w, p: MRRParams = DEFAULT_PARAMS, dt_trim=0.0):
     """Closed-form inverse of the forward chain (for ideal programming).
 
     Each stage is monotone over the operating branch (lambda detuning grows
@@ -165,6 +216,11 @@ def voltage_of_weight(w, p: MRRParams = DEFAULT_PARAMS):
 
     Weights are clipped to the physically realizable range [q_min, q_max];
     this is the quantizer's clamp, matching the paper's full-range mapping.
+
+    `dt_trim` is the re-calibration hook of the drift controller
+    (`repro.robust.drift`): a *known* static temperature bias [K] measured
+    at trim time is subtracted from the required heater rise, so the
+    programmed voltage compensates it exactly at the trim instant.
     """
     w = jnp.asarray(w)
     t_hi, t_lo = transmission_endpoints(p)
@@ -178,6 +234,7 @@ def voltage_of_weight(w, p: MRRParams = DEFAULT_PARAMS):
     dl = lam - p.lambda_0                                          # shift from rest
     u = dl / p.lambda_0
     dt = p.n_eff * u / (p.beta * (1.0 - u))                        # invert Eq. (3) right
+    dt = jnp.maximum(dt - dt_trim, 0.0)     # heater supplies what drift doesn't
     p_heater_mw = dt / p.r_thermal
     v2 = p_heater_mw / (p.kappa * 1e3) * p.r_heater                # invert Eq. (3) left
     return jnp.sqrt(jnp.maximum(v2, 0.0))
@@ -186,17 +243,26 @@ def voltage_of_weight(w, p: MRRParams = DEFAULT_PARAMS):
 @partial(jax.jit, static_argnames=("p", "noise"))
 def realize_weights(w_target, key: jax.Array | None = None,
                     p: MRRParams = DEFAULT_PARAMS,
-                    noise: NoiseModel = IDEAL):
+                    noise: NoiseModel = IDEAL,
+                    var: StaticVariation | None = None):
     """Program target weights onto MRRs and read back the noisy realization.
 
     This is THE core primitive of the paper's robustness analysis: the
     composition `weight_of_voltage(voltage_of_weight(w))` is the identity in
-    the ideal case and a stochastically perturbed identity under DAC/thermal
-    noise.  Values outside [q_min, q_max] saturate (physical clipping).
+    the ideal case and a stochastically perturbed identity under per-shot
+    DAC/thermal noise and/or a chip's static `var`.  Values outside
+    [q_min, q_max] saturate (physical clipping).
     """
     v = voltage_of_weight(w_target, p)
     v = jnp.clip(v, p.v_min, p.v_max)
-    return weight_of_voltage(v, p, noise, key)
+    return weight_of_voltage(v, p, noise, key, var)
+
+
+@partial(jax.jit, static_argnames=("n_samples", "p", "noise"))
+def _weight_noise_std(w_target, key, n_samples, p, noise):
+    keys = jax.random.split(key, n_samples)
+    samples = jax.vmap(lambda k: realize_weights(w_target, k, p, noise))(keys)
+    return samples.std(axis=0)
 
 
 def weight_noise_std(w_target, key: jax.Array, n_samples: int = 256,
@@ -207,10 +273,14 @@ def weight_noise_std(w_target, key: jax.Array, n_samples: int = 256,
     Used by the mapping profiler to quantify how V->w gain (slope of the
     transfer curve) shapes noise: weights programmed on the steep part of the
     Lorentzian amplify voltage noise more than those near the tails.
+
+    The sampler is jitted once with `n_samples` static — per-layer profiler
+    loops reuse the compiled vmap instead of retracing it on every call.
     """
-    keys = jax.random.split(key, n_samples)
-    samples = jax.vmap(lambda k: realize_weights(w_target, k, p, noise))(keys)
-    return samples.std(axis=0)
+    if not isinstance(n_samples, int) or n_samples < 1:
+        raise ValueError(f"n_samples must be a positive Python int (static "
+                         f"under jit), got {n_samples!r}")
+    return _weight_noise_std(w_target, key, n_samples, p, noise)
 
 
 def transfer_curve(n: int = 256, p: MRRParams = DEFAULT_PARAMS):

@@ -10,6 +10,7 @@ prefill -> padded KV cache -> jitted decode loop with donated cache.
 from __future__ import annotations
 
 import argparse
+import functools
 import time
 
 import jax
@@ -49,13 +50,20 @@ def main() -> None:
     cache = pad_cache(cfg, cache, args.gen + 1)
     print(f"prefill {b}x{s}: {time.time() - t0:.2f}s")
 
-    decode = jax.jit(bundle.decode_step, donate_argnums=())
+    # donate ONLY the cache operand: its buffers are dead after each step
+    # (the returned cache replaces them), so XLA can update the KV state in
+    # place instead of copying it every token.  token stays un-donated (it
+    # is rebuilt from the logits), and pos rides inside the donated cache.
+    @functools.partial(jax.jit, donate_argnums=(2,))
+    def decode(params, tok, cache):
+        return bundle.decode_step(params, {"token": tok, "pos": cache["pos"],
+                                           "cache": cache})
+
     tok = jnp.argmax(logits, -1)
     out = [tok]
     t0 = time.time()
     for i in range(args.gen - 1):
-        logits, cache = decode(params, {"token": tok, "pos": cache["pos"],
-                                        "cache": cache})
+        logits, cache = decode(params, tok, cache)
         if args.temperature > 0:
             key, sub = jax.random.split(key)
             tok = jax.random.categorical(sub, logits / args.temperature, -1)

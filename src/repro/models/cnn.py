@@ -92,19 +92,10 @@ def cnn_apply(params: dict, specs: list[ConvSpec], x: jax.Array,
             patches = _im2col(x, s.k, s.stride)
             b, h, w_, _ = patches.shape
             pr = patches.reshape(b, h, w_, s.c_in, s.k * s.k)
-            # per-channel contraction; noise semantics follow the resolved
-            # cfg but the contraction is einsum (C tiny independent
-            # sub-GEMMs)
-            cfg = engine.config(s.name)
-            w_eff = p["w"]
-            if cfg is not None and not cfg.noise.is_ideal:
-                from repro.core import mrr
-                from repro.core.quant import fake_quant
-                scale = jnp.maximum(jnp.max(jnp.abs(w_eff)), 1e-8)
-                wq = fake_quant(w_eff / scale, cfg.qcfg)
-                w_eff = mrr.realize_weights(wq, engine.key_for(s.name),
-                                            cfg.mrr_params,
-                                            cfg.noise) * scale
+            # per-channel contraction; noise/variation/gate semantics follow
+            # the resolved cfg but the contraction is einsum (C tiny
+            # independent sub-GEMMs)
+            w_eff = engine.effective_weight(p["w"], name=s.name)
             y = jnp.einsum("bhwck,ck->bhwc", pr, w_eff) + p["b"]
         else:
             patches = _im2col(x, s.k, s.stride)

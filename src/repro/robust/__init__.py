@@ -1,0 +1,58 @@
+"""repro.robust — vectorized Monte-Carlo device-variation subsystem.
+
+Splits the paper's noise story into its two physical time scales and makes
+both first-class, fully vectorized citizens:
+
+  per-shot noise       `mrr.NoiseModel` — fresh DAC/thermal draw every
+                       matmul (Eq. 8), unchanged;
+  per-device variation `variation` — static fab mismatch + thermal-
+                       crosstalk bias + driver offsets, drawn ONCE per
+                       fabricated chip as a `{layer: mrr.StaticVariation}`
+                       pytree;
+  chip ensembles       `ensemble` — an "N-chip wafer" evaluated in ONE
+                       jitted vmapped call: per-chip accuracy, clean-logit
+                       agreement, yield statistics;
+  sensitivity          `sensitivity` — perturb-one-layer degradation
+                       profiling as a traced one-hot gate, (chips x layers)
+                       per mapping in one call, feeding
+                       `mapping.LayerProfile.d_is/d_ws` directly;
+  drift + re-trim      `drift` — thermal drift schedules with periodic
+                       re-calibration through `mrr.voltage_of_weight`'s
+                       `dt_trim` hook;
+  reports              `report` — accuracy-vs-sigma and yield curves in
+                       the gateable `repro.bench` schema.
+
+Serving pins one sampled chip with `rosa.Engine.with_variation(chip)` and
+reuses it deterministically across decode steps.  CLI:
+``python -m repro.robust {ensemble,sensitivity,drift,sweep}``.
+"""
+
+from repro.robust.drift import DriftModel, DriftResult, residual_offsets, \
+    simulate, simulate_cnn, trim_voltages
+from repro.robust.ensemble import (EnsembleResult, clean_reference,
+                                   evaluate_cnn_ensemble, evaluate_ensemble,
+                                   make_ensemble_eval)
+from repro.robust.sensitivity import (accuracy_guarded_plan,
+                                      cnn_degradation_matrix,
+                                      cnn_profiles_mc, degradation_matrix,
+                                      plan_search, profile_layers_mc,
+                                      searched_cnn_hybrid_plan,
+                                      searched_hybrid_plan)
+from repro.robust.variation import (NO_VARIATION, PAPER_VARIATION,
+                                    VariationModel, chip_at, cnn_lane_dims,
+                                    ensemble_size, sample_chip,
+                                    sample_ensemble, scale_ensemble,
+                                    shift_thermal)
+
+__all__ = [
+    "DriftModel", "DriftResult", "EnsembleResult", "NO_VARIATION",
+    "PAPER_VARIATION", "VariationModel", "accuracy_guarded_plan",
+    "chip_at", "clean_reference",
+    "cnn_degradation_matrix", "cnn_lane_dims", "cnn_profiles_mc",
+    "degradation_matrix", "ensemble_size", "evaluate_cnn_ensemble",
+    "evaluate_ensemble", "make_ensemble_eval", "plan_search",
+    "profile_layers_mc", "residual_offsets", "sample_chip",
+    "sample_ensemble", "scale_ensemble", "searched_cnn_hybrid_plan",
+    "searched_hybrid_plan", "shift_thermal", "simulate", "simulate_cnn",
+    "trim_voltages",
+]

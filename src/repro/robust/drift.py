@@ -1,0 +1,148 @@
+"""Thermal drift schedules and periodic re-trim (in-situ recalibration).
+
+Deployed chips drift: ambient temperature and heater aging shift every
+ring's operating point over minutes-to-hours (the photonic-accelerator
+recalibration literature treats this as a first-class effect).  We model
+drift as a global thermal offset d(t) [K] added to each chip's static
+`ddt` field, and re-trim as the controller re-invoking the programming
+calibration (`mrr.voltage_of_weight` with its `dt_trim` hook) against the
+offset *measured at trim time* — so between trims the residual error is
+d(t) - d(t_trim), and a trim instant is exactly compensated.
+
+`simulate` reuses ONE jitted ensemble evaluator across the whole time
+grid: each step only shifts the ensemble's ddt leaves (same shapes, no
+retrace).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import mrr
+from repro.robust import variation as V
+from repro.robust.ensemble import (ApplyFn, EnsembleResult,
+                                   cnn_apply_fn, cnn_eval_set,
+                                   make_ensemble_eval)
+
+
+@dataclasses.dataclass(frozen=True)
+class DriftModel:
+    """Deterministic-in-key thermal drift schedule d(t) [K]."""
+
+    kind: str = "sine"          # sine | linear | walk
+    amp_k: float = 0.25         # peak offset [K]
+    period_s: float = 3600.0    # sine period / linear ramp horizon [s]
+
+    def offsets(self, t_grid: np.ndarray,
+                key: jax.Array | None = None) -> np.ndarray:
+        """d(t) sampled on the grid; `walk` needs a key (Gaussian steps
+        scaled so the horizon-end std is ~amp_k)."""
+        t = np.asarray(t_grid, dtype=np.float64)
+        if self.kind == "sine":
+            return self.amp_k * np.sin(2.0 * np.pi * t / self.period_s)
+        if self.kind == "linear":
+            return self.amp_k * t / self.period_s
+        if self.kind == "walk":
+            if key is None:
+                raise ValueError("random-walk drift requires a PRNG key")
+            steps = np.array(jax.random.normal(key, (len(t),)))
+            steps[0] = 0.0
+            walk = np.cumsum(steps)
+            return self.amp_k * walk / max(np.sqrt(len(t) - 1), 1.0)
+        raise ValueError(f"unknown drift kind {self.kind!r}")
+
+
+def trim_voltages(w_target, dt_known, p: mrr.MRRParams = mrr.DEFAULT_PARAMS):
+    """Re-invoke the programming calibration against a measured thermal
+    offset: voltages such that, WITH the offset present, the realized
+    weights hit their targets exactly (clipping aside)."""
+    return jnp.clip(mrr.voltage_of_weight(w_target, p, dt_trim=dt_known),
+                    p.v_min, p.v_max)
+
+
+def residual_offsets(offsets: np.ndarray, t_grid: np.ndarray,
+                     retrim_every: float | None) -> np.ndarray:
+    """Effective offset after periodic re-trim: d(t) - d(last trim <= t).
+
+    The offset measured at trim time is linearly interpolated on the
+    sampled schedule (exact whenever trims land on grid points) — snapping
+    to the previous grid sample would silently ignore trims falling
+    between samples.  `retrim_every=None` disables re-trim (residual = raw
+    drift; a single calibration at t=0 is always assumed)."""
+    t = np.asarray(t_grid, dtype=np.float64)
+    if retrim_every is None:
+        return offsets - offsets[0]
+    t_trims = (t // retrim_every) * retrim_every
+    return offsets - np.interp(t_trims, t, offsets)
+
+
+@dataclasses.dataclass
+class DriftResult:
+    times: np.ndarray               # (T,) [s]
+    residual_k: np.ndarray          # (T,) effective thermal offset [K]
+    mean_acc: np.ndarray            # (T,) ensemble-mean accuracy [%]
+    min_acc: np.ndarray             # (T,)
+    yield_2pp: np.ndarray           # (T,) yield at 2 pp drop
+    clean_acc: float
+
+    def worst_mean_acc(self) -> float:
+        return float(self.mean_acc.min())
+
+    def summary(self) -> dict:
+        return {"clean_acc": self.clean_acc,
+                "worst_mean_acc": self.worst_mean_acc(),
+                "final_mean_acc": float(self.mean_acc[-1]),
+                "min_yield_2pp": float(self.yield_2pp.min())}
+
+
+def simulate(apply_fn: ApplyFn, params, x, y, engine, ensemble: V.Chip,
+             key: jax.Array, drift: DriftModel, t_grid,
+             retrim_every: float | None = None, *,
+             eval_batch: int = 128,
+             yield_drop_pp: float = 2.0,
+             evaluator=None) -> DriftResult:
+    """Accuracy-over-time of a chip ensemble under a drift schedule,
+    with optional periodic re-trim.  One compiled evaluator serves every
+    time step (only the ddt leaves change); pass `evaluator` (a
+    `make_ensemble_eval` result for the same apply_fn/engine/eval_batch)
+    to reuse the compilation across several simulations — e.g. the
+    with/without-re-trim pair."""
+    t = np.asarray(t_grid, dtype=np.float64)
+    key, k_walk = jax.random.split(key)
+    offs = drift.offsets(t, k_walk)
+    resid = residual_offsets(offs, t, retrim_every)
+
+    n = V.ensemble_size(ensemble)
+    run = evaluator if evaluator is not None \
+        else make_ensemble_eval(apply_fn, engine, eval_batch=eval_batch)
+    mean_acc, min_acc, yld = [], [], []
+    clean = 0.0
+    for i in range(len(t)):
+        ens_t = V.shift_thermal(ensemble, resid[i])
+        keys = jax.random.split(jax.random.fold_in(key, i), n)
+        accs, agreement, clean_acc = run(params, x, y, ens_t, keys)
+        res = EnsembleResult(np.asarray(accs), np.asarray(agreement),
+                             float(clean_acc))
+        clean = res.clean_acc
+        mean_acc.append(res.mean_acc)
+        min_acc.append(res.min_acc)
+        yld.append(res.yield_frac(yield_drop_pp))
+    return DriftResult(times=t, residual_k=resid,
+                       mean_acc=np.asarray(mean_acc),
+                       min_acc=np.asarray(min_acc),
+                       yield_2pp=np.asarray(yld), clean_acc=clean)
+
+
+def simulate_cnn(params, model: str, engine, ensemble: V.Chip,
+                 key: jax.Array, drift: DriftModel, t_grid,
+                 retrim_every: float | None = None, *,
+                 n_eval: int = 256, eval_batch: int = 128,
+                 evaluator=None) -> DriftResult:
+    x, y = cnn_eval_set(n_eval)
+    return simulate(cnn_apply_fn(model), params, x, y, engine, ensemble,
+                    key, drift, t_grid, retrim_every,
+                    eval_batch=eval_batch, evaluator=evaluator)

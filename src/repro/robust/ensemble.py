@@ -1,0 +1,180 @@
+"""Vectorized Monte-Carlo chip-ensemble evaluation ("N-chip wafer").
+
+One jitted call evaluates a model forward over N static-variation
+instances at once: the ensemble pytree (leading chip axis) is `jax.vmap`ed
+through the `rosa.Engine`, per-shot noise keys split per chip, and the
+per-chip accuracy / logit-agreement / yield statistics come back in a
+single XLA program.  Inside the chip vmap the evaluation set is streamed
+in micro-batches (`lax.map`) so 64+ chips stay memory-bounded on CPU.
+
+    ens  = variation.sample_ensemble(key, 64, variation.cnn_lane_dims("alexnet"))
+    res  = ensemble.evaluate_cnn_ensemble(params, "alexnet", engine, ens, key)
+    res.mean_acc, res.yield_frac(max_drop_pp=2.0)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import mrr
+from repro.robust import variation as V
+
+# apply_fn(params, x, engine) -> logits; the engine arrives pre-loaded with
+# this chip's variation and per-shot key.
+ApplyFn = Callable[..., jax.Array]
+
+
+@dataclasses.dataclass
+class EnsembleResult:
+    """Per-chip statistics of one ensemble evaluation."""
+
+    accs: np.ndarray           # (n_chips,) accuracy [%] (vs labels, or vs
+    #                            clean predictions when labels are absent)
+    agreement: np.ndarray      # (n_chips,) argmax agreement with clean [0,1]
+    clean_acc: float           # noise-free reference accuracy [%]
+
+    @property
+    def n_chips(self) -> int:
+        return len(self.accs)
+
+    @property
+    def mean_acc(self) -> float:
+        return float(self.accs.mean())
+
+    @property
+    def std_acc(self) -> float:
+        return float(self.accs.std())
+
+    @property
+    def min_acc(self) -> float:
+        return float(self.accs.min())
+
+    @property
+    def mean_drop_pp(self) -> float:
+        return self.clean_acc - self.mean_acc
+
+    def yield_frac(self, max_drop_pp: float = 2.0) -> float:
+        """Fraction of chips within `max_drop_pp` of the clean model —
+        the wafer-yield figure of merit (higher is better)."""
+        return float((self.accs >= self.clean_acc - max_drop_pp).mean())
+
+    def yield_curve(self, drops_pp: Sequence[float]) -> list[tuple[float, float]]:
+        return [(float(d), self.yield_frac(d)) for d in drops_pp]
+
+    def summary(self) -> dict:
+        return {"n_chips": self.n_chips, "clean_acc": self.clean_acc,
+                "mean_acc": self.mean_acc, "std_acc": self.std_acc,
+                "min_acc": self.min_acc,
+                "mean_agreement": float(self.agreement.mean()),
+                "yield_2pp": self.yield_frac(2.0)}
+
+
+def clean_reference(engine):
+    """The noise-free twin of an engine: same plan with per-shot noise
+    muted, no pinned chip, no gates (blend or mapping), no key."""
+    plan = engine.plan.map_configs(
+        lambda c: dataclasses.replace(c, noise=mrr.IDEAL))
+    return engine.with_plan(plan).with_variation(None).with_gates(None) \
+        .with_mapping_gates(None).with_key(None)
+
+
+def chunk_eval_set(x: jax.Array, size: int) -> jax.Array:
+    """(N, ...) -> (N//size, size, ...) micro-batches for `lax.map`
+    streaming.  A remainder that does not fill a chunk is dropped — loudly,
+    because every downstream accuracy/yield statistic would silently run
+    on fewer samples than the caller asked for."""
+    size = min(size, x.shape[0])
+    n = (x.shape[0] // size) * size
+    if n < x.shape[0]:
+        import warnings
+        warnings.warn(
+            f"evaluation set truncated {x.shape[0]} -> {n} samples "
+            f"(not a multiple of eval_batch={size}); statistics cover the "
+            f"truncated set", stacklevel=2)
+    return x[:n].reshape(n // size, size, *x.shape[1:])
+
+
+def chunked_argmax_preds(apply_fn: ApplyFn, params, xb: jax.Array, engine
+                         ) -> jax.Array:
+    """Stream the (n_chunks, chunk, ...) batches through the engine and
+    return flat argmax predictions — the shared inner evaluator of
+    ensemble/sensitivity/plan-search (trace it inside jit/vmap)."""
+    return jax.lax.map(
+        lambda xc: jnp.argmax(apply_fn(params, xc, engine), -1),
+        xb).reshape(-1)
+
+
+def make_ensemble_eval(apply_fn: ApplyFn, engine, *, eval_batch: int = 128):
+    """Build the ONE jitted evaluator: (params, x, y, ensemble, keys) ->
+    (accs, agreement, clean_acc).
+
+    The chip axis is a `jax.vmap`; the evaluation set streams through
+    `lax.map` micro-batches of `eval_batch` inside it.  Reuse the returned
+    callable across calls (drift loops, sigma sweeps) — retracing only
+    happens on new shapes.
+    """
+    clean_engine = clean_reference(engine)
+
+    @jax.jit
+    def run(params, x, y, ens, keys):
+        xb = chunk_eval_set(x, eval_batch)
+        clean_pred = chunked_argmax_preds(apply_fn, params, xb, clean_engine)
+
+        def one_chip(var, k):
+            return chunked_argmax_preds(
+                apply_fn, params, xb, engine.with_variation(var).with_key(k))
+
+        preds = jax.vmap(one_chip)(ens, keys)          # (n_chips, n_eval)
+        ref = clean_pred if y is None else y[:preds.shape[1]]
+        accs = 100.0 * jnp.mean(preds == ref[None, :], axis=1)
+        agreement = jnp.mean(preds == clean_pred[None, :], axis=1)
+        clean_acc = 100.0 * jnp.mean(clean_pred == ref)
+        return accs, agreement, clean_acc
+
+    return run
+
+
+def evaluate_ensemble(apply_fn: ApplyFn, params, x, y, engine,
+                      ensemble: V.Chip, key: jax.Array, *,
+                      eval_batch: int = 128) -> EnsembleResult:
+    """One-shot convenience around `make_ensemble_eval` (builds, runs,
+    wraps).  `y=None` scores argmax agreement against the clean model
+    (label-free workloads: LM logit agreement)."""
+    n = V.ensemble_size(ensemble)
+    keys = jax.random.split(key, n)
+    run = make_ensemble_eval(apply_fn, engine, eval_batch=eval_batch)
+    accs, agreement, clean_acc = run(params, x, y, ensemble, keys)
+    return EnsembleResult(accs=np.asarray(accs),
+                          agreement=np.asarray(agreement),
+                          clean_acc=float(clean_acc))
+
+
+# ---------------------------------------------------------------------------
+# CNN front-end (the paper's behavioural experiments)
+# ---------------------------------------------------------------------------
+def cnn_apply_fn(model: str) -> ApplyFn:
+    from repro.models.cnn import LITE_MODELS, LITE_SKIPS, cnn_apply
+    specs, skips = LITE_MODELS[model], LITE_SKIPS.get(model)
+    return lambda params, x, engine: cnn_apply(params, specs, x, engine,
+                                               residual_from=skips)
+
+
+def cnn_eval_set(n_eval: int = 512, seed: int = 0):
+    from repro.data.synth_cifar import train_test_split
+    (_, _), (xte, yte) = train_test_split(seed=seed)
+    return jnp.asarray(xte[:n_eval]), jnp.asarray(yte[:n_eval])
+
+
+def evaluate_cnn_ensemble(params, model: str, engine, ensemble: V.Chip,
+                          key: jax.Array, *, n_eval: int = 512,
+                          eval_batch: int = 128,
+                          seed: int = 0) -> EnsembleResult:
+    """Ensemble statistics of a lite CNN on the synth-CIFAR test set."""
+    x, y = cnn_eval_set(n_eval, seed)
+    return evaluate_ensemble(cnn_apply_fn(model), params, x, y, engine,
+                             ensemble, key, eval_batch=eval_batch)

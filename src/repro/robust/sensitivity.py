@@ -1,0 +1,274 @@
+"""Vectorized perturb-one-layer sensitivity profiling (paper Fig. 6).
+
+The serial protocol (`training.cnn_train.layer_noise_profile`) re-jits one
+forward per (layer, mapping, MC draw): O(2·L·n_mc) compilations and
+evaluations.  Here "which single layer runs the noisy analog path" becomes
+a *traced* one-hot gate vector blended inside `rosa.backends`, so ONE
+jitted call per mapping evaluates the whole (chips x layers) grid:
+
+    accs[c, l] = accuracy with ONLY layer l analog-noisy on chip c
+
+Degradations are Monte-Carlo averages over the chip ensemble (static
+variation + per-shot noise), and feed `mapping.LayerProfile.d_is/d_ws`
+directly — the accuracy-aware hybrid search needs no per-model callback
+plumbing anymore.  Models without labels (LM stacks in the zoo) profile on
+clean-logit agreement instead, through the same code path.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import rosa
+from repro.core import energy as E
+from repro.core import mapping as M
+from repro.core import mrr
+from repro.core.constants import Mapping, OPEConfig
+from repro.robust import variation as V
+from repro.robust.ensemble import (ApplyFn, chunk_eval_set,
+                                   chunked_argmax_preds, clean_reference,
+                                   cnn_apply_fn, cnn_eval_set)
+
+_D_CLIP = 0.0   # degradations are reported as max(clean - acc, 0), like
+#                 the serial profiler
+
+
+def degradation_matrix(apply_fn: ApplyFn, params, x, y,
+                       layer_names: Sequence[str],
+                       base_cfg: rosa.RosaConfig,
+                       ensemble: V.Chip, key: jax.Array, *,
+                       noise: mrr.NoiseModel = mrr.PAPER_NOISE,
+                       mappings: Sequence[Mapping] = (Mapping.IS, Mapping.WS),
+                       eval_batch: int = 128) -> dict[str, dict[str, float]]:
+    """{layer: {mapping.value: degradation_pp}} over the chip ensemble.
+
+    One jitted vmap-over-(chips x layers) call per mapping.  `y=None`
+    scores clean-logit agreement (label-free profiling).
+    """
+    names = list(layer_names)
+    n_layers = len(names)
+    n_chips = V.ensemble_size(ensemble)
+    keys = jax.random.split(key, n_chips)
+    eye = jnp.eye(n_layers)
+
+    out: dict[str, dict[str, float]] = {n: {} for n in names}
+    for mp in mappings:
+        cfg = dataclasses.replace(base_cfg, mapping=mp, noise=noise)
+        engine = rosa.Engine(rosa.ExecutionPlan.build(cfg, None, names))
+        clean_cfg = dataclasses.replace(base_cfg, mapping=mp,
+                                        noise=mrr.IDEAL)
+        clean_engine = rosa.Engine(
+            rosa.ExecutionPlan.build(clean_cfg, None, names))
+
+        @jax.jit
+        def run(params, x, y, ens, keys, engine=engine,
+                clean_engine=clean_engine):
+            xb = chunk_eval_set(x, eval_batch)
+            clean_pred = chunked_argmax_preds(apply_fn, params, xb,
+                                              clean_engine)
+            ref = clean_pred if y is None else y[:clean_pred.shape[0]]
+            clean_acc = 100.0 * jnp.mean(clean_pred == ref)
+
+            def one_chip(var, k):
+                def one_layer(onehot):
+                    gates = {n: onehot[i] for i, n in enumerate(names)}
+                    e = engine.with_variation(var).with_gates(gates) \
+                        .with_key(k)
+                    return chunked_argmax_preds(apply_fn, params, xb, e)
+                preds = jax.vmap(one_layer)(eye)       # (L, n_eval)
+                return 100.0 * jnp.mean(preds == ref[None, :], axis=1)
+
+            accs = jax.vmap(one_chip)(ens, keys)       # (n_chips, L)
+            return clean_acc, accs
+
+        clean_acc, accs = run(params, x, y, ensemble, keys)
+        mean_accs = np.asarray(accs).mean(axis=0)      # MC over chips
+        for i, n in enumerate(names):
+            out[n][mp.value] = max(float(clean_acc) - float(mean_accs[i]),
+                                   _D_CLIP)
+    return out
+
+
+def plan_search(apply_fn: ApplyFn, params, x, y,
+                layer_names: Sequence[str],
+                base_cfg: rosa.RosaConfig,
+                ensemble: V.Chip, key: jax.Array,
+                candidates: np.ndarray, *,
+                noise: mrr.NoiseModel = mrr.PAPER_NOISE,
+                eval_batch: int = 64) -> np.ndarray:
+    """MC-evaluate a whole batch of hybrid-plan candidates in ONE jitted
+    call.
+
+    `candidates` is a (P, L) binary matrix (row p, column l: layer l runs
+    IS when 1, WS when 0).  Each layer's WS/IS orientation is superposed
+    behind a traced mapping gate (`rosa_matmul`'s `mgate`), so the plan
+    axis vmaps like any other batch axis — P plans x n_chips ensemble
+    forwards per call, identical PRNG draws across plans.  Returns the
+    (P,) ensemble-mean accuracies [%]; `y=None` scores clean-logit
+    agreement (label-free zoo workloads).
+    """
+    names = list(layer_names)
+    n_chips = V.ensemble_size(ensemble)
+    keys = jax.random.split(key, n_chips)
+    cand = jnp.asarray(candidates, dtype=jnp.float32)
+    cfg = dataclasses.replace(base_cfg, mapping=Mapping.WS, noise=noise)
+    engine = rosa.Engine(rosa.ExecutionPlan.build(cfg, None, names))
+    clean_engine = clean_reference(engine)
+
+    @jax.jit
+    def run(params, x, y, ens, keys, cand):
+        xb = chunk_eval_set(x, eval_batch)
+        ref = y[:xb.shape[0] * xb.shape[1]] if y is not None \
+            else chunked_argmax_preds(apply_fn, params, xb, clean_engine)
+
+        def one_plan(sel):
+            mgates = {n: sel[i] for i, n in enumerate(names)}
+
+            def one_chip(var, k):
+                e = engine.with_variation(var).with_key(k) \
+                    .with_mapping_gates(mgates)
+                preds = chunked_argmax_preds(apply_fn, params, xb, e)
+                return 100.0 * jnp.mean(preds == ref)
+
+            return jnp.mean(jax.vmap(one_chip)(ens, keys))
+
+        return jax.vmap(one_plan)(cand)
+
+    return np.asarray(run(params, x, y, ensemble, keys, cand))
+
+
+def searched_hybrid_plan(profiles: Sequence[M.LayerProfile],
+                         apply_fn: ApplyFn, params, x, y,
+                         base_cfg: rosa.RosaConfig,
+                         ensemble: V.Chip, key: jax.Array, *,
+                         noise: mrr.NoiseModel = mrr.PAPER_NOISE,
+                         max_extra_pp: float = 0.5,
+                         max_candidates: int = 6,
+                         eval_batch: int = 64
+                         ) -> tuple[dict[str, Mapping], dict]:
+    """Accuracy-verified hybrid search: profile-guided candidate ordering,
+    MC-verified in one vectorized call.
+
+    Single-layer degradations under-estimate full-plan cost (noise
+    compounds across layers), so instead of trusting the profile the
+    search MC-evaluates nested IS-prefix plans — always including the pure
+    WS row — over the chip ensemble and keeps the most IS-aggressive plan
+    that attains the best measured accuracy.  By construction the result
+    matches or beats pure WS under the search keys (Table-4 direction).
+    """
+    names = [p.name for p in profiles]
+    by_name = {p.name: p for p in profiles}
+    # IS-flip attractiveness: robustness gain first, then EDP leverage
+    eligible = [p.name for p in profiles
+                if p.d_is <= p.d_ws + max_extra_pp]
+    order = sorted(eligible,
+                   key=lambda n: (by_name[n].d_is - by_name[n].d_ws)
+                   + 0.5 * np.log(max(by_name[n].e_is, 1e-30)
+                                  / max(by_name[n].e_ws, 1e-30)))
+    order = order[:max_candidates]
+    cand = np.zeros((len(order) + 1, len(names)), dtype=np.float32)
+    for k, layer in enumerate(order):
+        cand[k + 1:, names.index(layer)] = 1.0
+
+    accs = plan_search(apply_fn, params, x, y, names, base_cfg, ensemble,
+                       key, cand, noise=noise, eval_batch=eval_batch)
+    best = accs.max()
+    # most IS-aggressive among the exact-best rows (EDP tie-break)
+    p_star = int(max(np.flatnonzero(accs >= best)))
+    plan = {layer: Mapping.IS for layer in order[:p_star]}
+    info = {"order": order, "accs": accs.tolist(),
+            "ws_acc": float(accs[0]), "chosen_acc": float(accs[p_star]),
+            "n_is": p_star}
+    return plan, info
+
+
+def accuracy_guarded_plan(profiles: Sequence[M.LayerProfile],
+                          max_extra_pp: float = 0.5
+                          ) -> dict[str, Mapping]:
+    """Accuracy-aware hybrid plan: the balanced-metric argmin
+    (`mapping.choose_mapping`), vetoed whenever its degradation exceeds the
+    layer's best mapping by more than `max_extra_pp` — then the more robust
+    mapping wins.  Under Monte-Carlo degradations with strong static
+    variation the raw paper metric can trade tens of pp for EDP (its alpha
+    term grows only logarithmically); the guard keeps the Table-4 direction
+    (hybrid accuracy >= WS) while still harvesting EDP wherever it is
+    accuracy-free."""
+    plan: dict[str, Mapping] = {}
+    for p in profiles:
+        m = M.choose_mapping(p)
+        if p.d(m) > min(p.d_is, p.d_ws) + max_extra_pp:
+            m = Mapping.IS if p.d_is < p.d_ws else Mapping.WS
+        plan[p.name] = m
+    return plan
+
+
+def profile_layers_mc(layers: Sequence[E.LayerShape], ope: OPEConfig,
+                      degradation: dict[str, dict[str, float]], *,
+                      batch: int = 1, **kwargs) -> list[M.LayerProfile]:
+    """Join a Monte-Carlo degradation matrix with the vectorized EDP model
+    into `mapping.LayerProfile`s — drop-in input for `hybrid_plan`."""
+    return M.profile_layers_fast(
+        layers, ope,
+        degradation_fn=M.degradation_fn_from_matrix(degradation),
+        batch=batch, **kwargs)
+
+
+# ---------------------------------------------------------------------------
+# CNN front-end
+# ---------------------------------------------------------------------------
+def cnn_degradation_matrix(params, model: str, *,
+                           n_chips: int = 16,
+                           key: jax.Array | None = None,
+                           noise: mrr.NoiseModel = mrr.PAPER_NOISE,
+                           var_model: V.VariationModel = V.PAPER_VARIATION,
+                           ensemble: V.Chip | None = None,
+                           n_eval: int = 256,
+                           eval_batch: int = 128
+                           ) -> dict[str, dict[str, float]]:
+    """Degradation matrix of a lite CNN over a freshly sampled (or given)
+    chip ensemble."""
+    from repro.models.cnn import LITE_MODELS
+    from repro.training.cnn_train import QAT_CFG
+
+    key = key if key is not None else jax.random.PRNGKey(42)
+    k_ens, k_mc = jax.random.split(key)
+    names = [s.name for s in LITE_MODELS[model]]
+    if ensemble is None:
+        ensemble = V.sample_ensemble(k_ens, n_chips,
+                                     V.cnn_lane_dims(model), var_model)
+    x, y = cnn_eval_set(n_eval)
+    return degradation_matrix(cnn_apply_fn(model), params, x, y, names,
+                              QAT_CFG, ensemble, k_mc, noise=noise,
+                              eval_batch=eval_batch)
+
+
+def searched_cnn_hybrid_plan(profiles: Sequence[M.LayerProfile], params,
+                             model: str, ensemble: V.Chip,
+                             key: jax.Array, *,
+                             noise: mrr.NoiseModel = mrr.PAPER_NOISE,
+                             n_eval: int = 256, eval_batch: int = 64,
+                             **kwargs) -> tuple[dict[str, Mapping], dict]:
+    """`searched_hybrid_plan` on a lite CNN's synth-CIFAR evaluation set."""
+    from repro.training.cnn_train import QAT_CFG
+
+    x, y = cnn_eval_set(n_eval)
+    return searched_hybrid_plan(profiles, cnn_apply_fn(model), params, x, y,
+                                QAT_CFG, ensemble, key, noise=noise,
+                                eval_batch=eval_batch, **kwargs)
+
+
+def cnn_profiles_mc(params, model: str, ope: OPEConfig, *,
+                    batch: int = 128,
+                    **kwargs) -> list[M.LayerProfile]:
+    """End to end: MC degradation matrix + full-size EDP rows -> profiles
+    for the layers that exist in both the lite model and the paper table."""
+    from repro.configs.paper_cnns import CNN_WORKLOADS
+
+    deg = cnn_degradation_matrix(params, model, **kwargs)
+    rows = [l for l in CNN_WORKLOADS[model] if l.name in deg]
+    return profile_layers_mc(rows, ope, deg, batch=batch)

@@ -1,0 +1,129 @@
+"""Per-device static variation: the chip-ensemble half of the noise model.
+
+The paper's Eq. (8) noise model draws a fresh DAC/thermal perturbation on
+every shot (`mrr.NoiseModel`).  Fabricated chips additionally differ from
+each other *statically*: driver/DAC offsets, thermal-crosstalk bias from
+neighbouring heaters, and fab mismatch of each ring's resonance wavelength
+(cf. the MRR-crossbar variation studies, arXiv:2106.04351 /
+arXiv:2111.06705).  This module samples those static fields ONCE per chip
+as a pytree keyed by layer name — an "N-chip wafer" is the same pytree with
+a leading ensemble axis, ready for `jax.vmap` (`repro.robust.ensemble`).
+
+Convention: variation fields are sampled per *reduction lane* (shape (K,)
+— one entry per physical ring lane; the OPE tile is reused across output
+channels, so lane mismatch correlates along N).  `rosa.backends` adapts
+the orientation per operand, so the SAME chip sample serves both IS and WS
+mappings — exactly what the sensitivity profiler needs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import zlib
+from typing import Mapping as TMapping, Sequence
+
+import jax
+
+from repro.core import mrr
+from repro.core.constants import SIGMA_DAC_DEFAULT, SIGMA_TH_DEFAULT
+
+
+@dataclasses.dataclass(frozen=True)
+class VariationModel:
+    """Standard deviations of the per-chip static fields (hashable spec)."""
+
+    sigma_v_static: float = 0.5 * SIGMA_DAC_DEFAULT    # [V] driver offset
+    sigma_dt_static: float = SIGMA_TH_DEFAULT          # [K] thermal bias
+    sigma_lambda_fab: float = 0.01                     # [nm] fab mismatch
+    #   (post-trim residual mismatch; raw fab spread is ~10x larger but
+    #   chips ship after a one-time per-ring trim)
+
+    @property
+    def is_zero(self) -> bool:
+        return (self.sigma_v_static == 0.0 and self.sigma_dt_static == 0.0
+                and self.sigma_lambda_fab == 0.0)
+
+    def scaled(self, s: float) -> "VariationModel":
+        return VariationModel(self.sigma_v_static * s,
+                              self.sigma_dt_static * s,
+                              self.sigma_lambda_fab * s)
+
+
+NO_VARIATION = VariationModel(0.0, 0.0, 0.0)
+PAPER_VARIATION = VariationModel()
+
+# A chip: {layer_name: StaticVariation}; an ensemble is the same pytree
+# with a leading n_chips axis on every leaf.
+Chip = dict[str, mrr.StaticVariation]
+
+
+def _layer_fold(key: jax.Array, name: str) -> jax.Array:
+    """Name-stable per-layer subkey (same CRC folding as rosa.layer_key)."""
+    return jax.random.fold_in(key,
+                              zlib.crc32(name.encode("utf-8")) & 0x7FFFFFFF)
+
+
+def sample_layer(key: jax.Array, model: VariationModel,
+                 lanes: int | Sequence[int]) -> mrr.StaticVariation:
+    """One layer's static fields: (K,) lane vectors (or a full shape)."""
+    shape = (lanes,) if isinstance(lanes, int) else tuple(lanes)
+    k_v, k_t, k_l = jax.random.split(key, 3)
+    return mrr.StaticVariation(
+        dv=model.sigma_v_static * jax.random.normal(k_v, shape),
+        ddt=model.sigma_dt_static * jax.random.normal(k_t, shape),
+        dlam=model.sigma_lambda_fab * jax.random.normal(k_l, shape))
+
+
+def sample_chip(key: jax.Array, dims: TMapping[str, int | Sequence[int]],
+                model: VariationModel = PAPER_VARIATION) -> Chip:
+    """Draw ONE fabricated chip: independent static fields per layer.
+
+    `dims` maps layer name -> lane count K (or a full field shape).  Layer
+    subkeys are folded from the name, so adding/removing layers never
+    perturbs the draw of the others.
+    """
+    return {name: sample_layer(_layer_fold(key, name), model, lanes)
+            for name, lanes in dims.items()}
+
+
+def sample_ensemble(key: jax.Array, n_chips: int,
+                    dims: TMapping[str, int | Sequence[int]],
+                    model: VariationModel = PAPER_VARIATION) -> Chip:
+    """An "N-chip wafer": `sample_chip` vmapped over `n_chips` keys —
+    every leaf gains a leading ensemble axis."""
+    keys = jax.random.split(key, n_chips)
+    return jax.vmap(lambda k: sample_chip(k, dims, model))(keys)
+
+
+def chip_at(ensemble: Chip, i) -> Chip:
+    """Select chip `i` (Python int or traced index) out of an ensemble."""
+    return jax.tree.map(lambda a: a[i], ensemble)
+
+
+def ensemble_size(ensemble: Chip) -> int:
+    return jax.tree.leaves(ensemble)[0].shape[0]
+
+
+def scale_ensemble(ensemble: Chip, s) -> Chip:
+    """Scale every static field (sigma-sweep knob)."""
+    return jax.tree.map(lambda a: a * s, ensemble)
+
+
+def shift_thermal(ensemble: Chip, offset) -> Chip:
+    """Add a global thermal offset [K] to every layer's ddt field — the
+    injection point for drift schedules (`repro.robust.drift`)."""
+    return {name: v.shift_ddt(offset) for name, v in ensemble.items()}
+
+
+def cnn_lane_dims(model: str) -> dict[str, int]:
+    """Reduction-lane count per layer of a lite CNN (weight K dimension)."""
+    from repro.models.cnn import LITE_MODELS
+    dims: dict[str, int] = {}
+    for s in LITE_MODELS[model]:
+        if s.kind == "fc":
+            dims[s.name] = s.c_in
+        elif s.kind == "dwconv":
+            dims[s.name] = s.c_in       # per-channel rings
+        else:
+            dims[s.name] = s.c_in * s.k * s.k
+    return dims

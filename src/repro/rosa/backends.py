@@ -119,16 +119,28 @@ def _pallas_backend(x: jax.Array, w: jax.Array, cfg: RosaConfig) -> jax.Array:
 # ---------------------------------------------------------------------------
 # Operand conditioning (noise placement)
 # ---------------------------------------------------------------------------
-def _noisy_realize(t: jax.Array, cfg: RosaConfig, key: jax.Array | None):
+def _noisy_realize(t: jax.Array, cfg: RosaConfig, key: jax.Array | None,
+                   var: mrr.StaticVariation | None = None,
+                   per_vector: bool = False):
     """Quantize a tensor to cfg.quant_bits and realize it on analog MRRs.
 
-    Values are normalized per-tensor to the MRR weight range [q_min, q_max],
-    programmed through the physical chain with DAC/thermal noise, and
-    de-normalized.  This is where WS puts weights and IS puts activations.
+    Values are normalized to the MRR weight range [q_min, q_max],
+    programmed through the physical chain with DAC/thermal noise and the
+    chip's static variation, and de-normalized.  This is where WS puts
+    weights and IS puts activations.
+
+    Weights are programmed once and share one per-tensor full-scale;
+    activations (`per_vector=True`) are driven vector-at-a-time, each
+    (M, K) row at its own DAC full-scale — batch outliers must not
+    compress every other sample's analog resolution.
     """
-    scale = jnp.maximum(jnp.max(jnp.abs(t)), 1e-8)
+    if per_vector and t.ndim >= 2:
+        scale = jnp.maximum(jnp.max(jnp.abs(t), axis=-1, keepdims=True),
+                            1e-8)
+    else:
+        scale = jnp.maximum(jnp.max(jnp.abs(t)), 1e-8)
     q = quant.fake_quant(t / scale, cfg.qcfg)          # 8-bit grid in [-1,1]
-    w = mrr.realize_weights(q, key, cfg.mrr_params, cfg.noise)
+    w = mrr.realize_weights(q, key, cfg.mrr_params, cfg.noise, var)
     return w * scale
 
 
@@ -137,11 +149,66 @@ def _digital_path(t: jax.Array, cfg: RosaConfig):
     return quant.fake_quant(t, cfg.qcfg)
 
 
+def _expand_lanes(var: mrr.StaticVariation | None, t: jax.Array):
+    """Adapt a chip's per-lane variation to the operand orientation.
+
+    Convention: 1-D variation fields are per-reduction-lane (length K — one
+    entry per physical ring lane).  Against a (K, N) weight they gain a
+    trailing axis so lane k perturbs every output channel it is reused for;
+    against (M, K) activations they broadcast as-is.  Scalars and
+    full-shape fields pass through.
+    """
+    if var is None:
+        return None
+    def fix(a):
+        a = jnp.asarray(a)
+        if a.ndim == 1 and t.ndim == 2 and a.shape[0] == t.shape[0]:
+            return a[:, None]
+        return a
+    return mrr.StaticVariation(fix(var.dv), fix(var.ddt), fix(var.dlam))
+
+
+def _analog_operand(t: jax.Array, cfg: RosaConfig, key: jax.Array | None,
+                    var: mrr.StaticVariation | None,
+                    gate: jax.Array | None, per_vector: bool = False):
+    """Condition the analog-side operand: noisy realization under per-shot
+    noise + static variation, optionally convex-blended against the exact
+    digital path by a traced `gate` in [0, 1] (the vectorized
+    perturb-one-layer selector of `repro.robust.sensitivity`)."""
+    clean = _digital_path(t, cfg)
+    if cfg.noise.is_ideal and var is None and gate is None:
+        return clean
+    noisy = _noisy_realize(t, cfg, key, var, per_vector)
+    if gate is None:
+        return noisy
+    return clean + gate * (noisy - clean)
+
+
+def condition_weight(w: jax.Array, cfg: RosaConfig | None,
+                     key: jax.Array | None,
+                     var: mrr.StaticVariation | None = None,
+                     gate: jax.Array | None = None):
+    """Weight conditioning outside the matmul fast path (per-channel
+    contractions like depthwise conv): analog realization + gate blend.
+    Identity when the layer is dense or fully ideal (matching the historic
+    dwconv behaviour: no fake-quant on the ideal path)."""
+    if cfg is None or (cfg.noise.is_ideal and var is None and gate is None):
+        return w
+    noisy = _noisy_realize(w, cfg, key, _expand_lanes(var, w))
+    if gate is None:
+        return noisy
+    return w + gate * (noisy - w)
+
+
 def _forward(x: jax.Array, w: jax.Array, cfg: RosaConfig,
-             key: jax.Array | None) -> jax.Array:
+             key: jax.Array | None,
+             var: mrr.StaticVariation | None = None,
+             gate: jax.Array | None = None,
+             mgate: jax.Array | None = None) -> jax.Array:
     if cfg.mode is ComputeMode.MIXED:
         if cfg.noise.is_ideal and cfg.osa_cfg.is_ideal \
-                and cfg.backend in ("auto", "dense"):
+                and cfg.backend in ("auto", "dense") \
+                and var is None and gate is None and mgate is None:
             # exactness-preserving shortcut: ideal OSA over signed-digit
             # planes == fake-quant matmul (tests/test_osa.py asserts this),
             # so QAT training skips the 7-plane decomposition entirely.
@@ -151,24 +218,32 @@ def _forward(x: jax.Array, w: jax.Array, cfg: RosaConfig,
             # ("dense" is algebraically the shortcut itself.)
             return _digital_path(x, cfg) @ _digital_path(w, cfg)
         bname, contract = resolve_backend(cfg.backend)
-        if cfg.mapping in (Mapping.WS, Mapping.GEMM):
-            w_eff = _noisy_realize(w, cfg, key) if not cfg.noise.is_ideal \
-                else _digital_path(w, cfg)
+        if mgate is not None:
+            # mapping superposition: realize BOTH orientations and blend the
+            # OPERANDS by the traced selector (exact for mgate in {0, 1}) —
+            # a whole {layer: IS|WS} plan becomes a float vector, so plan
+            # candidates are a vmap axis (repro.robust.sensitivity's
+            # MC-verified hybrid search).  One contraction either way.
+            k_w, k_x = (jax.random.split(key) if key is not None
+                        else (None, None))
+            w_ws = _analog_operand(w, cfg, k_w, _expand_lanes(var, w), gate)
+            x_is = _analog_operand(x, cfg, k_x, var, gate, per_vector=True)
+            w_eff = (1.0 - mgate) * w_ws + mgate * _digital_path(w, cfg)
+            x_eff = (1.0 - mgate) * _digital_path(x, cfg) + mgate * x_is
+        elif cfg.mapping in (Mapping.WS, Mapping.GEMM):
+            w_eff = _analog_operand(w, cfg, key, _expand_lanes(var, w), gate)
             x_eff = _digital_path(x, cfg)
         else:  # IS: inputs on the analog rings, weights exact digital
             w_eff = _digital_path(w, cfg)
-            x_eff = _noisy_realize(x, cfg, key) if not cfg.noise.is_ideal \
-                else _digital_path(x, cfg)
+            x_eff = _analog_operand(x, cfg, key, var, gate, per_vector=True)
         return contract(x_eff, w_eff, cfg)
     elif cfg.mode is ComputeMode.ANALOG:
         if key is not None:
             k_w, k_x = jax.random.split(key)
         else:
             k_w = k_x = None
-        w_eff = _noisy_realize(w, cfg, k_w) if not cfg.noise.is_ideal \
-            else _digital_path(w, cfg)
-        x_eff = _noisy_realize(x, cfg, k_x) if not cfg.noise.is_ideal \
-            else _digital_path(x, cfg)
+        w_eff = _analog_operand(w, cfg, k_w, _expand_lanes(var, w), gate)
+        x_eff = _analog_operand(x, cfg, k_x, var, gate)
         return x_eff @ w_eff                      # single-shot analog readout
     elif cfg.mode is ComputeMode.DIGITAL:
         return _digital_path(x, cfg) @ _digital_path(w, cfg)
@@ -180,19 +255,26 @@ def _forward(x: jax.Array, w: jax.Array, cfg: RosaConfig,
 # ---------------------------------------------------------------------------
 @partial(jax.custom_vjp, nondiff_argnums=(2,))
 def rosa_matmul(x: jax.Array, w: jax.Array, cfg: RosaConfig = DEFAULT,
-                key: jax.Array | None = None) -> jax.Array:
+                key: jax.Array | None = None,
+                var: mrr.StaticVariation | None = None,
+                gate: jax.Array | None = None,
+                mgate: jax.Array | None = None) -> jax.Array:
     """Optical matmul  y = x @ w  through the configured ROSA pipeline.
 
     x: (..., K) activations; w: (K, N) weights; returns (..., N).
-    Straight-through gradients w.r.t. both x and w.
+    `var` pins one chip's static device variation on the analog operand;
+    `gate` (traced scalar in [0, 1]) blends the analog path against the
+    exact digital one; `mgate` (traced, {0=WS, 1=IS}) superposes the two
+    mapping orientations.  Straight-through gradients w.r.t. both x and w
+    (noise, variation and gates are treated as non-differentiable).
     """
     lead = x.shape[:-1]
-    y = _forward(x.reshape(-1, x.shape[-1]), w, cfg, key)
+    y = _forward(x.reshape(-1, x.shape[-1]), w, cfg, key, var, gate, mgate)
     return y.reshape(*lead, w.shape[-1])
 
 
-def _fwd(x, w, cfg, key):
-    return rosa_matmul(x, w, cfg, key), (x, w)
+def _fwd(x, w, cfg, key, var, gate, mgate):
+    return rosa_matmul(x, w, cfg, key, var, gate, mgate), (x, w)
 
 
 def _bwd(cfg, res, g):
@@ -201,7 +283,7 @@ def _bwd(cfg, res, g):
     x2 = x.reshape(-1, x.shape[-1])
     dx = (g2 @ w.T).reshape(x.shape)
     dw = x2.T @ g2
-    return dx, dw, None
+    return dx, dw, None, None, None, None
 
 
 rosa_matmul.defvjp(_fwd, _bwd)

@@ -31,8 +31,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import mrr
 from repro.core.constants import Mapping
-from repro.rosa.backends import DEFAULT, RosaConfig, rosa_matmul
+from repro.rosa.backends import (DEFAULT, RosaConfig, condition_weight,
+                                 rosa_matmul)
 from repro.rosa.ledger import EnergyLedger
 from repro.rosa.plan import ExecutionPlan
 
@@ -48,11 +50,24 @@ def layer_key(base: jax.Array, name: str, step: int | jax.Array = 0
 
 @dataclasses.dataclass(frozen=True)
 class Engine:
-    """Routes every named matmul through the resolved execution plan."""
+    """Routes every named matmul through the resolved execution plan.
+
+    `variation` pins one sampled chip (`{layer: mrr.StaticVariation}`,
+    drawn by `repro.robust.variation`) so every forward — including a
+    serving decode loop — sees the SAME fabricated device deterministically;
+    `gates` carries traced per-layer scalars in [0, 1] blending the analog
+    path against the exact digital one (the vectorized perturb-one-layer
+    selector of `repro.robust.sensitivity`); `mapping_gates` carries traced
+    per-layer WS/IS selectors ({0=WS, 1=IS}) so a whole hybrid plan becomes
+    a float vector — a vmap axis for the MC-verified plan search.
+    """
 
     plan: ExecutionPlan = ExecutionPlan()
     key: jax.Array | None = None
     ledger: EnergyLedger | None = None
+    variation: TMapping[str, mrr.StaticVariation] | None = None
+    gates: TMapping[str, jax.Array] | None = None
+    mapping_gates: TMapping[str, jax.Array] | None = None
 
     # -- constructors -------------------------------------------------------
     @classmethod
@@ -97,6 +112,28 @@ class Engine:
     def with_plan(self, plan: ExecutionPlan) -> "Engine":
         return dataclasses.replace(self, plan=plan)
 
+    def with_variation(self, variation: TMapping[str, mrr.StaticVariation]
+                       | None) -> "Engine":
+        """Pin one sampled chip: every subsequent matmul of layer `name`
+        applies `variation[name]` (layers absent from the dict run
+        variation-free).  Pass None to unpin."""
+        return dataclasses.replace(
+            self, variation=dict(variation) if variation is not None
+            else None)
+
+    def with_gates(self, gates: TMapping[str, jax.Array] | None) -> "Engine":
+        """Per-layer analog/digital blend gates (traced scalars in [0,1])."""
+        return dataclasses.replace(
+            self, gates=dict(gates) if gates is not None else None)
+
+    def with_mapping_gates(self, mapping_gates: TMapping[str, jax.Array]
+                           | None) -> "Engine":
+        """Per-layer WS/IS selectors ({0=WS, 1=IS}, traced): superpose the
+        two mapping orientations so plan candidates can be vmapped."""
+        return dataclasses.replace(
+            self, mapping_gates=dict(mapping_gates)
+            if mapping_gates is not None else None)
+
     # -- resolution ---------------------------------------------------------
     @property
     def is_dense(self) -> bool:
@@ -108,6 +145,16 @@ class Engine:
     def key_for(self, name: str, step: int | jax.Array = 0
                 ) -> jax.Array | None:
         return None if self.key is None else layer_key(self.key, name, step)
+
+    def variation_for(self, name: str) -> mrr.StaticVariation | None:
+        return None if self.variation is None else self.variation.get(name)
+
+    def gate_for(self, name: str) -> jax.Array | None:
+        return None if self.gates is None else self.gates.get(name)
+
+    def mapping_gate_for(self, name: str) -> jax.Array | None:
+        return None if self.mapping_gates is None \
+            else self.mapping_gates.get(name)
 
     # -- the routed matmul --------------------------------------------------
     def matmul(self, x: jax.Array, w: jax.Array, *, name: str = "",
@@ -135,4 +182,18 @@ class Engine:
         if key is None:
             key = self.key_for(name, step)
         return rosa_matmul(x.astype(jnp.float32), w.astype(jnp.float32),
-                           cfg, key)
+                           cfg, key, self.variation_for(name),
+                           self.gate_for(name), self.mapping_gate_for(name))
+
+    def effective_weight(self, w: jax.Array, *, name: str = "",
+                         step: int | jax.Array = 0,
+                         key: jax.Array | None = None) -> jax.Array:
+        """Noise-place a weight tensor for contractions the engine does not
+        route itself (per-channel depthwise convs): same analog realization,
+        variation pinning and gate blending as `matmul`'s WS side; identity
+        for dense or fully ideal layers."""
+        cfg = self.plan.resolve(name)
+        if key is None:
+            key = self.key_for(name, step)
+        return condition_weight(w, cfg, key, self.variation_for(name),
+                                self.gate_for(name))

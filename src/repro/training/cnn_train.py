@@ -8,6 +8,11 @@ noise with a chosen per-layer IS/WS mapping.  All on synth-CIFAR
 Execution routes through `rosa.Engine`: training uses a uniform-QAT plan,
 noisy evaluation swaps in per-layer overrides (`ExecutionPlan.build`), and
 per-layer PRNG keys are folded by the engine from one base key.
+
+Variation-aware QAT: pass a chip `ensemble` (repro.robust.variation) and
+each training step pins chip ``step % n_chips`` on the engine — the model
+learns weights that survive the whole sampled wafer, not just the nominal
+device (the ensemble-axis analogue of the paper's noise-aware training).
 """
 
 from __future__ import annotations
@@ -43,23 +48,38 @@ def _loss(params, specs, skips, x, y, engine, key=None):
 
 def train_cnn(model: str = "alexnet", steps: int = 400, batch: int = 64,
               lr: float = 3e-3, seed: int = 0, qat: bool = True,
-              n_train: int = 4096, verbose: bool = False):
-    """Returns (params, clean_test_accuracy)."""
+              n_train: int = 4096, verbose: bool = False,
+              ensemble=None):
+    """Returns (params, clean_test_accuracy).
+
+    With a chip `ensemble` ({layer: mrr.StaticVariation}, leading chip
+    axis — see repro.robust.variation.sample_ensemble), step i trains
+    through chip ``i % n_chips``: variation-aware QAT over the sampled
+    wafer.  The returned accuracy stays the *clean* (variation-free) one.
+    """
     specs = LITE_MODELS[model]
     skips = LITE_SKIPS.get(model)
     (xtr, ytr), (xte, yte) = train_test_split(n_train=n_train, seed=seed)
     key = jax.random.PRNGKey(seed)
     params = init_params(cnn_def(specs), key)
     engine = qat_engine(model) if qat else rosa.Engine.dense()
+    n_chips = 0
+    if ensemble is not None:
+        from repro.robust.variation import ensemble_size
+        n_chips = ensemble_size(ensemble)
 
     # Adam
     m = jax.tree.map(jnp.zeros_like, params)
     v = jax.tree.map(jnp.zeros_like, params)
 
     @jax.jit
-    def step(params, m, v, i, x, y):
+    def step(params, m, v, i, x, y, ens):
+        eng = engine
+        if ens is not None:
+            chip = jax.tree.map(lambda a: a[jnp.mod(i, n_chips)], ens)
+            eng = engine.with_variation(chip)
         loss, g = jax.value_and_grad(_loss)(params, specs, skips, x, y,
-                                            engine)
+                                            eng)
         m = jax.tree.map(lambda a, b: 0.9 * a + 0.1 * b, m, g)
         v = jax.tree.map(lambda a, b: 0.99 * a + 0.01 * b * b, v, g)
         t = i + 1
@@ -71,8 +91,9 @@ def train_cnn(model: str = "alexnet", steps: int = 400, batch: int = 64,
     rng = np.random.default_rng(seed)
     for i in range(steps):
         idx = rng.integers(0, len(xtr), batch)
-        params, m, v, loss = step(params, m, v, i,
-                                  jnp.asarray(xtr[idx]), jnp.asarray(ytr[idx]))
+        params, m, v, loss = step(params, m, v, jnp.asarray(i),
+                                  jnp.asarray(xtr[idx]), jnp.asarray(ytr[idx]),
+                                  ensemble)
         if verbose and i % 100 == 0:
             print(f"  step {i} loss {float(loss):.3f}")
 

@@ -69,6 +69,81 @@ else:
         _check_inverse(wt)
 
 
+# ---------------------------------------------------------------------------
+# Property-style invariants of the voltage<->weight physical chain
+# (hypothesis-driven with the fixed-sample fallback, like the inverse test)
+# ---------------------------------------------------------------------------
+def _check_roundtrip_ideal(wt: float) -> None:
+    """realize_weights under IDEAL noise is the identity on [q_min, q_max]."""
+    w2 = mrr.realize_weights(jnp.asarray(wt))
+    assert abs(float(w2) - wt) < 5e-4
+
+
+def _check_voltage_monotone(w_lo: float, w_hi: float) -> None:
+    """voltage_of_weight is strictly decreasing: larger weights sit closer
+    to lambda_ref, i.e. need LESS detuning, i.e. less drive voltage."""
+    v_lo = float(mrr.voltage_of_weight(jnp.asarray(w_lo)))
+    v_hi = float(mrr.voltage_of_weight(jnp.asarray(w_hi)))
+    assert v_lo > v_hi
+
+
+def _check_saturation(wt: float) -> None:
+    """Targets beyond [q_min, q_max] clip to the range edge (physical
+    saturation of the transmission map)."""
+    p = mrr.DEFAULT_PARAMS
+    w2 = float(mrr.realize_weights(jnp.asarray(wt)))
+    edge = p.q_max if wt > p.q_max else p.q_min
+    assert abs(w2 - edge) < 2e-3
+
+
+if hp is not None:
+    @hp.given(st.floats(-1.0, 1.0))
+    @hp.settings(max_examples=30, deadline=None)
+    def test_roundtrip_identity_property(wt):
+        _check_roundtrip_ideal(wt)
+
+    @hp.given(st.floats(-0.999, 0.995), st.floats(1e-3, 0.5))
+    @hp.settings(max_examples=30, deadline=None)
+    def test_voltage_of_weight_monotone_property(w_lo, gap):
+        _check_voltage_monotone(w_lo, min(w_lo + gap, 0.999))
+
+    @hp.given(st.one_of(st.floats(1.0001, 50.0), st.floats(-50.0, -1.0001)))
+    @hp.settings(max_examples=30, deadline=None)
+    def test_saturation_clipping_property(wt):
+        _check_saturation(wt)
+else:
+    @pytest.mark.parametrize(
+        "wt", [-1.0, -0.87, -0.31, 0.0, 0.22, 0.64, 0.93, 1.0])
+    def test_roundtrip_identity_property(wt):
+        _check_roundtrip_ideal(wt)
+
+    @pytest.mark.parametrize("w_lo,w_hi", [(-0.999, -0.5), (-0.5, 0.0),
+                                           (-0.1, 0.1), (0.0, 0.7),
+                                           (0.7, 0.999)])
+    def test_voltage_of_weight_monotone_property(w_lo, w_hi):
+        _check_voltage_monotone(w_lo, w_hi)
+
+    @pytest.mark.parametrize("wt", [1.001, 1.5, 7.0, -1.001, -2.0, -40.0])
+    def test_saturation_clipping_property(wt):
+        _check_saturation(wt)
+
+
+def test_weight_noise_std_jitted_once(key):
+    """The MC sampler reuses one compiled vmap across profiler-style calls
+    and rejects non-static sample counts."""
+    s1 = mrr.weight_noise_std(jnp.zeros(()), key, 128)
+    s2 = mrr.weight_noise_std(jnp.zeros(()), key, 128)
+    assert float(s1) == float(s2)
+    before = mrr._weight_noise_std._cache_size()
+    for _ in range(4):
+        mrr.weight_noise_std(jnp.full((), 0.3), key, 128)
+    assert mrr._weight_noise_std._cache_size() == before + 1  # one new shape
+    with pytest.raises(ValueError):
+        mrr.weight_noise_std(jnp.zeros(()), key, jnp.asarray(16))
+    with pytest.raises(ValueError):
+        mrr.weight_noise_std(jnp.zeros(()), key, 0)
+
+
 def test_noise_statistics(key):
     """Realized-weight std under paper noise is small but nonzero and
     grows with sigma."""

@@ -1,0 +1,382 @@
+"""repro.robust — chip ensembles, sensitivity gates, drift, reports."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import rosa
+from repro.core import mrr
+from repro.core.constants import Mapping
+from repro.robust import drift as D
+from repro.robust import ensemble as ENS
+from repro.robust import sensitivity as S
+from repro.robust import variation as V
+
+NOISY_CFG = rosa.RosaConfig(noise=mrr.PAPER_NOISE)
+DIMS = {"a": 6, "b": 4}
+
+
+def _toy_apply(params, x, engine):
+    """Two-layer MLP routed through the engine (names 'a', 'b')."""
+    h = jax.nn.relu(engine.matmul(x, params["a"], name="a"))
+    return engine.matmul(h, params["b"], name="b")
+
+
+def _toy_params(key):
+    k1, k2 = jax.random.split(key)
+    return {"a": jax.random.normal(k1, (6, 8)) * 0.4,
+            "b": jax.random.normal(k2, (8, 3)) * 0.4}
+
+
+def _toy_dims():
+    return {"a": 6, "b": 8}
+
+
+# ---------------------------------------------------------------------------
+# variation sampling
+# ---------------------------------------------------------------------------
+def test_sampling_deterministic_and_name_stable(key):
+    c1 = V.sample_chip(key, DIMS)
+    c2 = V.sample_chip(key, DIMS)
+    for n in DIMS:
+        for f in ("dv", "ddt", "dlam"):
+            np.testing.assert_array_equal(getattr(c1[n], f),
+                                          getattr(c2[n], f))
+    # dropping a layer must not perturb the other layer's draw
+    c3 = V.sample_chip(key, {"a": 6})
+    np.testing.assert_array_equal(c1["a"].dv, c3["a"].dv)
+    assert c1["a"].dv.shape == (6,)
+    assert not np.allclose(np.asarray(c1["a"].dv[:4]),
+                           np.asarray(c1["b"].dv))
+
+
+def test_ensemble_axis_and_chip_at(key):
+    ens = V.sample_ensemble(key, 5, DIMS)
+    assert V.ensemble_size(ens) == 5
+    assert ens["a"].dv.shape == (5, 6)
+    chip2 = V.chip_at(ens, 2)
+    np.testing.assert_array_equal(chip2["a"].ddt, ens["a"].ddt[2])
+    # chips are distinct draws
+    assert not np.allclose(np.asarray(ens["a"].dv[0]),
+                           np.asarray(ens["a"].dv[1]))
+
+
+def test_scale_and_thermal_shift(key):
+    ens = V.sample_ensemble(key, 3, DIMS)
+    z = V.scale_ensemble(ens, 0.0)
+    assert float(jnp.abs(z["a"].dv).max()) == 0.0
+    sh = V.shift_thermal(ens, 0.5)
+    np.testing.assert_allclose(np.asarray(sh["b"].ddt),
+                               np.asarray(ens["b"].ddt) + 0.5, rtol=1e-6)
+    np.testing.assert_array_equal(sh["b"].dv, ens["b"].dv)
+
+
+def test_static_variation_perturbs_realization(key):
+    w = jnp.linspace(-0.8, 0.8, 16)
+    var = V.sample_layer(key, V.PAPER_VARIATION, 16)
+    w_var = mrr.realize_weights(w, None, var=var)
+    w_zero = mrr.realize_weights(w, None, var=mrr.StaticVariation.zero())
+    w_plain = mrr.realize_weights(w)
+    np.testing.assert_allclose(np.asarray(w_zero), np.asarray(w_plain),
+                               atol=1e-6)
+    assert float(jnp.max(jnp.abs(w_var - w_plain))) > 1e-4
+
+
+# ---------------------------------------------------------------------------
+# engine hooks: pinning, gates, mapping gates
+# ---------------------------------------------------------------------------
+def test_engine_pins_chip_deterministically(key):
+    params = _toy_params(key)
+    x = jax.random.normal(jax.random.fold_in(key, 9), (5, 6))
+    ens = V.sample_ensemble(key, 3, _toy_dims())
+    engine = rosa.Engine.from_config(rosa.RosaConfig(), layers=["a", "b"])
+    e0 = engine.with_variation(V.chip_at(ens, 0))
+    y0a = _toy_apply(params, x, e0)
+    y0b = _toy_apply(params, x, e0)           # same chip -> same forward
+    np.testing.assert_array_equal(np.asarray(y0a), np.asarray(y0b))
+    # decode-step stability: step only folds the per-shot key, and with
+    # ideal per-shot noise the pinned chip output is step-invariant
+    ya = e0.matmul(x, params["a"], name="a", step=0)
+    yb = e0.matmul(x, params["a"], name="a", step=7)
+    np.testing.assert_array_equal(np.asarray(ya), np.asarray(yb))
+    y1 = _toy_apply(params, x, engine.with_variation(V.chip_at(ens, 1)))
+    assert float(jnp.max(jnp.abs(y0a - y1))) > 1e-6
+
+
+def test_gate_blend_matches_explicit_noisy_plan(key):
+    """gate=1 on exactly one layer == an explicit one-layer-noisy plan."""
+    params = _toy_params(key)
+    x = jax.random.normal(jax.random.fold_in(key, 3), (4, 6))
+    base = rosa.RosaConfig()         # ideal
+    noisy = NOISY_CFG
+    names = ["a", "b"]
+    gated_engine = rosa.Engine(
+        rosa.ExecutionPlan.build(noisy, None, names),
+        key=key).with_gates({"a": jnp.float32(1.0), "b": jnp.float32(0.0)})
+    explicit_engine = rosa.Engine(
+        rosa.ExecutionPlan.build(base, {"a": noisy}, names), key=key)
+    y_gate = _toy_apply(params, x, gated_engine)
+    y_explicit = _toy_apply(params, x, explicit_engine)
+    np.testing.assert_allclose(np.asarray(y_gate), np.asarray(y_explicit),
+                               atol=1e-5)
+
+
+def test_mapping_gate_matches_static_mapping(key):
+    """mgate in {0,1} reproduces the static WS / IS configs exactly
+    (deterministic case: ideal per-shot noise + pinned variation)."""
+    params = _toy_params(key)
+    x = jax.random.normal(jax.random.fold_in(key, 4), (4, 6))
+    chip = V.sample_chip(key, _toy_dims())
+    names = ["a", "b"]
+    for g, mapping in ((0.0, Mapping.WS), (1.0, Mapping.IS)):
+        cfg = rosa.RosaConfig(mapping=Mapping.WS)
+        e_gate = rosa.Engine(rosa.ExecutionPlan.build(cfg, None, names)) \
+            .with_variation(chip) \
+            .with_mapping_gates({n: jnp.float32(g) for n in names})
+        e_static = rosa.Engine(rosa.ExecutionPlan.build(
+            dataclasses.replace(cfg, mapping=mapping), None, names)) \
+            .with_variation(chip)
+        np.testing.assert_allclose(
+            np.asarray(_toy_apply(params, x, e_gate)),
+            np.asarray(_toy_apply(params, x, e_static)), atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# ensemble evaluation: ONE jitted vmapped call
+# ---------------------------------------------------------------------------
+def test_ensemble_eval_toy_one_trace(key):
+    params = _toy_params(key)
+    x = jax.random.normal(jax.random.fold_in(key, 5), (32, 6))
+    y = jax.random.randint(jax.random.fold_in(key, 6), (32,), 0, 3)
+    ens = V.sample_ensemble(key, 10, _toy_dims())
+    engine = rosa.Engine.from_config(NOISY_CFG, layers=["a", "b"])
+    traces = []
+
+    def counted(params, xc, e):
+        traces.append(1)
+        return _toy_apply(params, xc, e)
+
+    res = ENS.evaluate_ensemble(counted, params, x, y, engine, ens, key,
+                                eval_batch=16)
+    # one clean trace + ONE vmapped chip trace — not one per chip
+    assert len(traces) == 2
+    assert res.accs.shape == (10,)
+    assert 0.0 <= res.yield_frac(2.0) <= 1.0
+    assert res.summary()["n_chips"] == 10
+
+
+def test_ensemble_eval_label_free_agreement(key):
+    params = _toy_params(key)
+    x = jax.random.normal(jax.random.fold_in(key, 7), (24, 6))
+    ens = V.sample_ensemble(key, 4, _toy_dims())
+    engine = rosa.Engine.from_config(NOISY_CFG, layers=["a", "b"])
+    res = ENS.evaluate_ensemble(_toy_apply, params, x, None, engine, ens,
+                                key, eval_batch=12)
+    # label-free: accuracy IS agreement with the clean model
+    np.testing.assert_allclose(res.accs, 100.0 * res.agreement, atol=1e-5)
+    assert res.clean_acc == pytest.approx(100.0)
+
+
+def test_paper_cnn_64_chips_one_vmapped_call(key):
+    """Acceptance: the paper CNN over >= 64 variation instances in ONE
+    jitted vmapped call (untrained params — the mechanism is the test)."""
+    from repro.models.cnn import LITE_MODELS, cnn_def
+    from repro.models.module import init_params
+
+    model = "alexnet"
+    params = init_params(cnn_def(LITE_MODELS[model]), key)
+    names = [s.name for s in LITE_MODELS[model]]
+    ens = V.sample_ensemble(key, 64, V.cnn_lane_dims(model))
+    engine = rosa.Engine.from_config(NOISY_CFG, layers=names)
+    x, y = ENS.cnn_eval_set(64)
+    traces = []
+    base_fn = ENS.cnn_apply_fn(model)
+
+    def counted(params, xc, e):
+        traces.append(1)
+        return base_fn(params, xc, e)
+
+    res = ENS.evaluate_ensemble(counted, params, x, y, engine, ens, key,
+                                eval_batch=32)
+    assert len(traces) == 2            # clean + one vmapped 64-chip trace
+    assert res.accs.shape == (64,)
+    assert np.all(np.isfinite(res.accs))
+
+
+# ---------------------------------------------------------------------------
+# sensitivity: degradation matrix + verified plan search
+# ---------------------------------------------------------------------------
+def test_degradation_matrix_toy(key):
+    params = _toy_params(key)
+    x = jax.random.normal(jax.random.fold_in(key, 8), (32, 6))
+    y = jax.random.randint(jax.random.fold_in(key, 9), (32,), 0, 3)
+    ens = V.sample_ensemble(key, 4, _toy_dims())
+    deg = S.degradation_matrix(_toy_apply, params, x, y, ["a", "b"],
+                               rosa.RosaConfig(), ens, key,
+                               eval_batch=16)
+    assert set(deg) == {"a", "b"}
+    for n in deg:
+        assert set(deg[n]) == {Mapping.IS.value, Mapping.WS.value}
+        for v in deg[n].values():
+            assert v >= 0.0 and np.isfinite(v)
+
+
+def test_plan_search_row0_is_pure_ws(key):
+    params = _toy_params(key)
+    x = jax.random.normal(jax.random.fold_in(key, 11), (32, 6))
+    y = jax.random.randint(jax.random.fold_in(key, 12), (32,), 0, 3)
+    ens = V.sample_ensemble(key, 4, _toy_dims())
+    cand = np.array([[0, 0], [1, 0], [1, 1]], dtype=np.float32)
+    accs = S.plan_search(_toy_apply, params, x, y, ["a", "b"],
+                         rosa.RosaConfig(), ens, key, cand, eval_batch=16)
+    assert accs.shape == (3,)
+    assert np.all(np.isfinite(accs))
+
+
+def test_searched_plan_matches_or_beats_ws(key):
+    """The verified search always returns a plan whose in-search accuracy
+    >= the pure-WS row (WS is candidate row 0 by construction)."""
+    params = _toy_params(key)
+    x = jax.random.normal(jax.random.fold_in(key, 13), (48, 6))
+    y = jax.random.randint(jax.random.fold_in(key, 14), (48,), 0, 3)
+    ens = V.sample_ensemble(key, 4, _toy_dims())
+    from repro.core.mapping import LayerProfile
+    # layer 'a': IS attractive (robust + cheaper); 'b': clearly WS
+    profiles = [LayerProfile("a", d_is=0.0, d_ws=0.5, e_is=1e-6, e_ws=1e-4),
+                LayerProfile("b", d_is=9.0, d_ws=0.1, e_is=1e-4, e_ws=1e-6)]
+    plan, info = S.searched_hybrid_plan(profiles, _toy_apply, params, x, y,
+                                        rosa.RosaConfig(), ens, key,
+                                        eval_batch=16)
+    assert info["chosen_acc"] >= info["ws_acc"]
+    # 'b' is ineligible (d_is >> d_ws + margin) so it can never flip
+    assert plan.get("b") is not Mapping.IS
+    assert set(info) >= {"order", "accs", "n_is"}
+
+
+def test_accuracy_guarded_plan_vetoes_costly_is():
+    from repro.core.mapping import LayerProfile, choose_mapping
+    # EDP ratio so extreme the paper metric picks IS despite 12 pp cost
+    lured = LayerProfile("lured", d_is=12.0, d_ws=0.2, e_is=1e-8, e_ws=1e-2)
+    assert choose_mapping(lured) is Mapping.IS          # the raw metric bites
+    safe = LayerProfile("safe", d_is=0.1, d_ws=0.3, e_is=1e-6, e_ws=1e-5)
+    plan = S.accuracy_guarded_plan([lured, safe], max_extra_pp=0.5)
+    assert plan["lured"] is Mapping.WS                  # vetoed
+    assert plan["safe"] is Mapping.IS                   # kept (more robust)
+
+
+def test_profile_layers_mc_joins_edp(key):
+    from repro.core import energy as E
+    from repro.core.constants import ROSA_OPTIMAL
+    layers = [E.LayerShape("a", m=64, k=6, n=8),
+              E.LayerShape("b", m=64, k=8, n=3)]
+    deg = {"a": {Mapping.IS.value: 1.0, Mapping.WS.value: 0.2},
+           "b": {Mapping.IS.value: 0.0, Mapping.WS.value: 0.3}}
+    profs = S.profile_layers_mc(layers, ROSA_OPTIMAL, deg, batch=4)
+    assert [p.name for p in profs] == ["a", "b"]
+    assert profs[0].d_is == 1.0 and profs[1].d_ws == 0.3
+    assert profs[0].e_is > 0.0 and profs[0].e_ws > 0.0
+
+
+# ---------------------------------------------------------------------------
+# drift + re-trim
+# ---------------------------------------------------------------------------
+def test_drift_schedules():
+    t = np.linspace(0.0, 3600.0, 13)
+    sine = D.DriftModel(kind="sine", amp_k=0.4).offsets(t)
+    assert abs(float(sine[0])) < 1e-9 and np.max(np.abs(sine)) <= 0.4 + 1e-9
+    lin = D.DriftModel(kind="linear", amp_k=0.4).offsets(t)
+    np.testing.assert_allclose(lin[-1], 0.4, rtol=1e-6)
+    walk = D.DriftModel(kind="walk", amp_k=0.4).offsets(
+        t, jax.random.PRNGKey(0))
+    assert walk[0] == 0.0 and np.all(np.isfinite(walk))
+    with pytest.raises(ValueError):
+        D.DriftModel(kind="walk").offsets(t)          # needs a key
+    with pytest.raises(ValueError):
+        D.DriftModel(kind="nope").offsets(t)
+
+
+def test_residual_offsets_retrim():
+    t = np.array([0.0, 400.0, 900.0, 1300.0, 1800.0])
+    offs = D.DriftModel(kind="linear", amp_k=1.0, period_s=1800.0).offsets(t)
+    resid = D.residual_offsets(offs, t, retrim_every=900.0)
+    # trim instants are exactly compensated; between trims the residual is
+    # drift since the last trim
+    np.testing.assert_allclose(resid[[0, 2, 4]], 0.0, atol=1e-12)
+    np.testing.assert_allclose(resid[1], offs[1], atol=1e-12)
+    np.testing.assert_allclose(resid[3], offs[3] - offs[2], atol=1e-12)
+    # no retrim: one calibration at t=0 only
+    np.testing.assert_allclose(D.residual_offsets(offs, t, None),
+                               offs - offs[0], atol=1e-12)
+    # a trim falling BETWEEN grid samples still takes effect (interpolated
+    # trim-time offset, not snapped back to the previous sample)
+    t2 = np.array([0.0, 1000.0])
+    offs2 = D.DriftModel(kind="linear", amp_k=1.0,
+                         period_s=1000.0).offsets(t2)
+    resid2 = D.residual_offsets(offs2, t2, retrim_every=900.0)
+    np.testing.assert_allclose(resid2[1], 0.1, atol=1e-12)  # d(1000)-d(900)
+
+
+def test_trim_voltages_compensate_known_offset():
+    """Re-invoked calibration nulls a known thermal bias (away from the
+    V_min saturation region); uncompensated programming does not."""
+    w = jnp.linspace(-0.9, 0.5, 29)
+    ddt = jnp.float32(0.3)
+    bias = mrr.StaticVariation(jnp.zeros(()), ddt, jnp.zeros(()))
+    w_trim = mrr.weight_of_voltage(D.trim_voltages(w, ddt), var=bias)
+    err_trim = float(jnp.max(jnp.abs(w_trim - w)))
+    v_raw = jnp.clip(mrr.voltage_of_weight(w), 1.0, 3.0)
+    err_raw = float(jnp.max(jnp.abs(mrr.weight_of_voltage(v_raw, var=bias)
+                                    - w)))
+    assert err_trim < 1e-3
+    assert err_trim < err_raw / 10.0
+
+
+def test_drift_simulation_toy(key):
+    params = _toy_params(key)
+    x = jax.random.normal(jax.random.fold_in(key, 15), (24, 6))
+    y = jax.random.randint(jax.random.fold_in(key, 16), (24,), 0, 3)
+    ens = V.sample_ensemble(key, 3, _toy_dims())
+    engine = rosa.Engine.from_config(NOISY_CFG, layers=["a", "b"])
+    t = np.linspace(0.0, 1800.0, 3)
+    dm = D.DriftModel(kind="linear", amp_k=1.0, period_s=1800.0)
+    res = D.simulate(_toy_apply, params, x, y, engine, ens, key, dm, t,
+                     retrim_every=900.0, eval_batch=12)
+    assert res.mean_acc.shape == (3,) and np.all(np.isfinite(res.mean_acc))
+    assert set(res.summary()) >= {"worst_mean_acc", "min_yield_2pp"}
+    # residual at every sampled instant is a trim instant here -> zero
+    np.testing.assert_allclose(res.residual_k, 0.0, atol=1e-12)
+
+
+# ---------------------------------------------------------------------------
+# ensemble-axis QAT + reports
+# ---------------------------------------------------------------------------
+def test_train_cnn_over_ensemble_axis(key):
+    from repro.training.cnn_train import train_cnn
+    ens = V.sample_ensemble(key, 2, V.cnn_lane_dims("alexnet"))
+    params, acc = train_cnn("alexnet", steps=2, batch=8, n_train=64,
+                            ensemble=ens)
+    assert np.isfinite(acc)
+    assert all(np.all(np.isfinite(np.asarray(l)))
+               for l in jax.tree.leaves(params))
+
+
+def test_report_schema_roundtrip(tmp_path):
+    from repro.bench.schema import BenchResult, load
+    from repro.robust import report as R
+    res = ENS.EnsembleResult(accs=np.array([70.0, 68.0, 40.0]),
+                             agreement=np.array([0.9, 0.8, 0.4]),
+                             clean_acc=71.0)
+    metrics = R.ensemble_metrics(res, gate=True) \
+        + R.yield_curve_metrics(res, drops_pp=(1.0, 5.0))
+    names = [m.name for m in metrics]
+    assert len(names) == len(set(names))          # schema rejects dupes
+    path = R.save_report([BenchResult(name="robust_test", metrics=metrics)],
+                         tmp_path / "ROBUST.json", seq=3)
+    rep = load(path)
+    assert rep.result("robust_test").metric("yield_2pp").value \
+        == pytest.approx(1.0 / 3.0)
+    assert rep.result("robust_test").metric("mean_acc").direction \
+        == "higher_is_better"
