@@ -204,6 +204,17 @@ def bench_robust_smoke(quick: bool) -> list[Metric]:
             + [dc.replace(m, name=f"sens_{m.name}") for m in m_sen])
 
 
+def bench_serve_smoke(quick: bool) -> list[Metric]:
+    """repro.serve end-to-end: a seeded Poisson request stream through the
+    continuous-batching scheduler vs the static one-shot baseline on the
+    smoke arch.  Gated metrics are deterministic by construction — step
+    units and tick latencies depend on request lengths and scheduling, not
+    on sampled token values; energy prices the decode trace analytically.
+    The headline gate: continuous batching >= 1.5x one-shot tokens/unit."""
+    from repro.serve import smoke_report
+    return smoke_report(n_requests=24 if quick else 48)
+
+
 def bench_roofline(quick: bool) -> list[Metric]:
     from benchmarks import roofline as R
     rows = [d for r in R.load("results/dryrun", "single")
@@ -227,6 +238,7 @@ BENCHES: dict[str, callable] = {
     "ledger_trace": bench_ledger_trace,
     "table4_hybrid": bench_table4_hybrid,
     "robust_smoke": bench_robust_smoke,
+    "serve_smoke": bench_serve_smoke,
     "roofline": bench_roofline,
 }
 

@@ -1,8 +1,8 @@
-"""Batched LM serving demo: prefill a prompt batch and decode greedily.
+"""LM serving demo: a Poisson request stream through continuous batching.
 
 Uses the reduced zamba2 (hybrid SSM + shared-attention) config so the
 example exercises the most interesting cache machinery: per-group shared
-KV caches + SSD states + conv states.
+KV caches + SSD states + conv states, admitted and evicted slot-by-slot.
 
 Run:  PYTHONPATH=src python examples/serve_lm.py
 """
@@ -13,5 +13,6 @@ import sys
 if __name__ == "__main__":
     raise SystemExit(subprocess.call(
         [sys.executable, "-m", "repro.launch.serve", "--arch", "zamba2-1.2b",
-         "--smoke", "--batch", "4", "--prompt-len", "32", "--gen", "16",
+         "--smoke", "--requests", "12", "--rate", "1.0", "--n-slots", "2",
+         "--max-len", "48", "--gen-range", "2", "24",
          "--temperature", "0.7"]))

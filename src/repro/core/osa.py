@@ -98,7 +98,8 @@ def osa_mac(x_digits: jax.Array, w: jax.Array, cfg: OSAConfig = IDEAL_OSA,
 
 def osa_matmul_ref(x: jax.Array, w: jax.Array, cfg: OSAConfig = IDEAL_OSA,
                    quant: Q.QuantConfig = Q.Q8,
-                   key: jax.Array | None = None) -> jax.Array:
+                   key: jax.Array | None = None,
+                   per_vector: bool = False) -> jax.Array:
     """Full OSA matmul reference: float x (M,K) @ w (K,N) via the optical path.
 
     Pipeline (exactly what the hardware does):
@@ -111,7 +112,7 @@ def osa_matmul_ref(x: jax.Array, w: jax.Array, cfg: OSAConfig = IDEAL_OSA,
     With an ideal OSAConfig this equals fake-quant(x) @ w to float precision.
     This function is the oracle for kernels/osa_matmul.
     """
-    q, scale = Q.quantize(x, quant)
+    q, scale = Q.quantize(x, quant, per_vector=per_vector)
     if cfg.pam_bits == 1:
         digits = Q.decompose_planes(q, quant)          # (T, M, K)
     else:

@@ -43,14 +43,29 @@ class QuantConfig:
 Q8 = QuantConfig(bits=8)
 
 
-def quantize(x: jax.Array, cfg: QuantConfig = Q8, scale: jax.Array | None = None):
+def absmax_scale(x: jax.Array, per_vector: bool = False) -> jax.Array:
+    """Quantization full-scale: per-tensor absmax, or per trailing-axis
+    vector with `per_vector` (each (..., K) row gets its own full-scale).
+    The single source of the 1e-8 floor — the digital path (here) and the
+    analog realization (rosa.backends._noisy_realize) must keep using the
+    SAME scale convention or their blend in _analog_operand diverges."""
+    if per_vector and x.ndim >= 2:
+        return jnp.maximum(jnp.max(jnp.abs(x), axis=-1, keepdims=True),
+                           1e-8)
+    return jnp.maximum(jnp.max(jnp.abs(x)), 1e-8)
+
+
+def quantize(x: jax.Array, cfg: QuantConfig = Q8, scale: jax.Array | None = None,
+             per_vector: bool = False):
     """Symmetric uniform quantization -> (int values, scale).
 
-    scale is per-tensor absmax unless given.  Returned ints are float-typed
+    scale is absmax unless given: per-tensor by default, per-row with
+    `per_vector` (the serving path needs numerics that don't couple batch
+    rows through a shared scale).  Returned ints are float-typed
     (TPU-friendly) in [-qmax, qmax].
     """
     if scale is None:
-        scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-8)
+        scale = absmax_scale(x, per_vector)
     q = jnp.clip(jnp.round(x / scale * cfg.qmax), -cfg.qmax, cfg.qmax)
     return q, scale
 
@@ -59,9 +74,10 @@ def dequantize(q: jax.Array, scale: jax.Array, cfg: QuantConfig = Q8):
     return q * (scale / cfg.qmax)
 
 
-def fake_quant(x: jax.Array, cfg: QuantConfig = Q8):
+def fake_quant(x: jax.Array, cfg: QuantConfig = Q8,
+               per_vector: bool = False):
     """Quantize-dequantize with straight-through gradient (QAT primitive)."""
-    q, scale = quantize(x, cfg)
+    q, scale = quantize(x, cfg, per_vector=per_vector)
     xq = dequantize(q, scale, cfg)
     return x + jax.lax.stop_gradient(xq - x)
 

@@ -186,6 +186,38 @@ def replicated(mesh: Mesh):
 
 
 # ---------------------------------------------------------------------------
+# Slot (serving batch) sharding — repro.serve
+#
+# Continuous-batching decode is embarrassingly parallel over slots: every
+# slot's token depends only on its own cache row.  The serve step therefore
+# runs under a shard_map (shard_map_compat) whose in/out specs shard every
+# state leaf on its slot dimension; these helpers build those specs from
+# the cache's logical-axes tree, so the serve subsystem never hand-indexes
+# leaf ranks.
+# ---------------------------------------------------------------------------
+def spec_on_dim(ndim: int, dim: int, axes: str | tuple[str, ...]) -> P:
+    """PartitionSpec placing `axes` on dimension `dim` of a rank-`ndim`
+    tensor, every other dimension unsharded."""
+    parts: list[Any] = [None] * ndim
+    if not isinstance(axes, str) and len(axes) == 1:
+        axes = axes[0]
+    parts[dim] = axes
+    return P(*parts)
+
+
+def slot_dim_specs(axes_tree, template, mesh_axes: tuple[str, ...],
+                   name: str = "cache_batch"):
+    """Spec pytree sharding every leaf's `name` logical dim over
+    `mesh_axes`.  `template` fixes leaf ranks; `axes_tree` is the logical
+    axes pytree (models.model.cache_axes for a decode cache)."""
+    flat_t, treedef = jax.tree.flatten(template)
+    flat_a = treedef.flatten_up_to(axes_tree)
+    specs = [spec_on_dim(t.ndim, a.index(name), mesh_axes)
+             for t, a in zip(flat_t, flat_a)]
+    return jax.tree.unflatten(treedef, specs)
+
+
+# ---------------------------------------------------------------------------
 # Expert-parallel shard_map in_specs (see models/moe.py)
 # ---------------------------------------------------------------------------
 def ep_param_specs(p: dict, fsdp: tuple[str, ...] | None) -> dict:

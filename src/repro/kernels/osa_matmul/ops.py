@@ -29,17 +29,21 @@ def _on_tpu() -> bool:
 
 
 @functools.partial(jax.jit, static_argnames=("quant_bits", "pam_bits", "fused",
-                                             "bm", "bn", "bk"))
+                                             "per_vector", "bm", "bn", "bk"))
 def osa_matmul(x: jax.Array, w: jax.Array, gains: jax.Array | None = None,
                *, quant_bits: int = 8, pam_bits: int = 1, fused: bool = True,
+               per_vector: bool = False,
                bm: int = 128, bn: int = 128, bk: int = 128) -> jax.Array:
     """Float activations -> quantize -> OSA kernel -> dequantized output.
 
     x: (M, K) float; w: (K, N) float; returns (M, N) f32.
     pam_bits > 1 shrinks the slot count (PAM-2^k digits, paper Sec. 3.1).
+    per_vector quantizes each activation row at its own full-scale
+    (RosaConfig.act_per_vector — serving's batch-decoupling invariant);
+    the (M, 1) scale broadcasts through the final dequant.
     """
     cfg = Q.QuantConfig(bits=quant_bits)
-    q, scale = Q.quantize(x, cfg)
+    q, scale = Q.quantize(x, cfg, per_vector=per_vector)
     n_planes = -(-cfg.n_planes // pam_bits)
     if gains is None:
         gains = (Q.plane_weights(cfg) if pam_bits == 1

@@ -1,12 +1,43 @@
-"""Step-function factories shared by the train driver and the dry-run."""
+"""Step-function factories shared by the train driver, the dry-run and the
+serving CLI."""
 
 from __future__ import annotations
 
+import functools
+
 import jax
+import jax.numpy as jnp
 
 from repro.distributed import compress as C
 from repro.models.model import ModelBundle
 from repro.optim import AdamWConfig, adamw_init, adamw_update
+
+
+def make_sampling_decode_step(bundle: ModelBundle):
+    """-> step(params, tok, cache, temperature, key) -> (tok, cache, key).
+
+    ONE jitted step for the fixed-batch decode loop: the cache is donated
+    (in-place KV update), `temperature` is a TRACED scalar and the sampling
+    key is carried loop state — greedy (temperature 0) and sampled decoding
+    share a single compiled executable instead of building two jitted
+    branches and re-threading the key from Python each token (the historic
+    launch/serve.py bug).  Continuous-batching serving has its own step
+    (`repro.serve.make_serve_step`); this one backs `--policy batch`."""
+
+    @functools.partial(jax.jit, donate_argnums=(2,))
+    def step(params, tok, cache, temperature, key):
+        logits, cache = bundle.decode_step(
+            params, {"token": tok, "pos": cache["pos"], "cache": cache})
+        key, sub = jax.random.split(key)
+        t = jnp.maximum(jnp.asarray(temperature, jnp.float32), 1e-6)
+        sampled = jax.random.categorical(
+            sub, logits.astype(jnp.float32) / t, -1)
+        greedy = jnp.argmax(logits, -1)
+        tok = jnp.where(jnp.asarray(temperature, jnp.float32) > 0.0,
+                        sampled, greedy).astype(jnp.int32)
+        return tok, cache, key
+
+    return step
 
 
 def make_train_step(bundle: ModelBundle, opt_cfg: AdamWConfig,

@@ -149,7 +149,9 @@ def attn_def(cfg: AttnConfig) -> dict:
 
 def cache_write(cache: jax.Array, new: jax.Array, pos: jax.Array,
                 uniform: bool) -> jax.Array:
-    """Write one token per sequence into cache (B, S, ...) at `pos` (B,)."""
+    """Write `new` (B, C, ...) per-sequence tokens into cache (B, S, ...)
+    starting at `pos` (B,).  C == 1 is the decode step; C > 1 is a prefill
+    chunk (serving)."""
     if uniform:
         # all positions equal: a dynamic-update-slice along S — GSPMD keeps
         # a seq-sharded cache in place (no involuntary replication)
@@ -157,8 +159,15 @@ def cache_write(cache: jax.Array, new: jax.Array, pos: jax.Array,
             + (jnp.zeros((), jnp.int32),) * (cache.ndim - 2)
         return jax.lax.dynamic_update_slice(cache, new.astype(cache.dtype),
                                             idx)
-    b = cache.shape[0]
-    return cache.at[jnp.arange(b), pos].set(new.astype(cache.dtype)[:, 0])
+    b, c = new.shape[:2]
+    if c == 1:
+        return cache.at[jnp.arange(b), pos].set(new.astype(cache.dtype)[:, 0])
+    # ragged chunk write: batched scatter at pos[b] + [0, C); rows whose
+    # window crosses S drop the out-of-range tokens (jax scatter semantics)
+    rows = jnp.arange(b)[:, None]
+    cols = pos[:, None] + jnp.arange(c)[None, :]
+    return cache.at[rows, cols].set(new.astype(cache.dtype),
+                                    mode="drop")
 
 
 def _repeat_kv(k: jax.Array, n_heads: int) -> jax.Array:
@@ -308,35 +317,39 @@ def attn_decode(p: dict, cfg: AttnConfig, x: jax.Array, cache: tuple,
                 pos: jax.Array, *, window=0, theta=None,
                 memory: jax.Array | None = None,
                 memory_pos: jax.Array | None = None):
-    """One-token decode. x: (B, 1, D); cache: (k, v) each (B, S, KV, D);
-    pos: (B,) current position.  Returns (out, new_cache)."""
+    """Cached decode. x: (B, C, D); cache: (k, v) each (B, S, KV, D);
+    pos: (B,) first position of the chunk.  C == 1 is the classic one-token
+    step; C > 1 is a prefill chunk writing C tokens at pos..pos+C (serving).
+    Returns (out, new_cache)."""
     theta = cfg.rope_theta if theta is None else theta
+    c = x.shape[1]
+    q_pos = pos[:, None] + jnp.arange(c)[None, :]
     q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
     if cfg.qk_norm:
         q = rmsnorm(p["q_norm"], q)
     if cfg.cross:
         k_full, v_full = cache       # static encoder memory projections
         k_pos = memory_pos[:, :]
-        bias = _mask_bias(pos[:, None], k_pos, False, 0)
+        bias = _mask_bias(q_pos, k_pos, False, 0)
         o = attention_core(q, _repeat_kv(k_full, cfg.n_heads),
                            _repeat_kv(v_full, cfg.n_heads), bias)
         return jnp.einsum("bshk,hkd->bsd", o, p["wo"]), cache
-    q = rope(q, pos[:, None], theta)
+    q = rope(q, q_pos, theta)
     k_new = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
     v_new = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
     if cfg.qk_norm:
         k_new = rmsnorm(p["k_norm"], k_new)
-    k_new = rope(k_new, pos[:, None], theta)
+    k_new = rope(k_new, q_pos, theta)
     kc, vc = cache
     b = x.shape[0]
     kc = cache_write(kc, k_new, pos, cfg.uniform_decode)
     vc = cache_write(vc, v_new, pos, cfg.uniform_decode)
-    o = flash_decode(q, kc, vc, pos, window, cfg.n_heads)
+    o = flash_decode(q, kc, vc, pos, window, cfg.n_heads) if c == 1 else None
     if o is None:                      # unsharded cache: plain attention
         s = kc.shape[1]
         k_pos = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
-        bias = _mask_bias(pos[:, None], k_pos, True, window,
-                          k_len_valid=(pos + 1)[:, None])
+        bias = _mask_bias(q_pos, k_pos, True, window,
+                          k_len_valid=(pos + c)[:, None])
         o = attention_core(q, _repeat_kv(kc, cfg.n_heads),
                            _repeat_kv(vc, cfg.n_heads), bias)
     return jnp.einsum("bshk,hkd->bsd", o, p["wo"]), (kc, vc)

@@ -110,12 +110,14 @@ def mla_decode(p: dict, cfg: MLAConfig, x: jax.Array, cache: tuple,
                pos: jax.Array):
     """Absorbed single-token decode against the compressed cache.
 
-    x: (B, 1, D); cache: (c_kv (B, S, kv_lora), k_rope (B, S, qk_rope));
-    pos: (B,).  Returns (out (B, 1, D), new_cache).
+    x: (B, C, D); cache: (c_kv (B, S, kv_lora), k_rope (B, S, qk_rope));
+    pos: (B,) first position of the chunk (C == 1: classic decode; C > 1:
+    a serving prefill chunk).  Returns (out (B, C, D), new_cache).
     """
-    b = x.shape[0]
-    q_nope, q_rope = _project_q(p, cfg, x, pos[:, None])
-    c_new, r_new = _compress_kv(p, cfg, x, pos[:, None])
+    b, c = x.shape[:2]
+    q_pos = pos[:, None] + jnp.arange(c)[None, :]
+    q_nope, q_rope = _project_q(p, cfg, x, q_pos)
+    c_new, r_new = _compress_kv(p, cfg, x, q_pos)
     c_kv, k_rope = cache
     from repro.models.layers import cache_write
     c_kv = cache_write(c_kv, c_new, pos, cfg.uniform_decode)
@@ -129,8 +131,8 @@ def mla_decode(p: dict, cfg: MLAConfig, x: jax.Array, cache: tuple,
     scores = scores.astype(jnp.float32) * scale
     s = c_kv.shape[1]
     k_pos = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
-    bias = _mask_bias(pos[:, None], k_pos, True, 0,
-                      k_len_valid=(pos + 1)[:, None])
+    bias = _mask_bias(q_pos, k_pos, True, 0,
+                      k_len_valid=(pos + c)[:, None])
     probs = jax.nn.softmax(scores + bias[:, None], axis=-1).astype(x.dtype)
     o_c = jnp.einsum("bhqk,bkl->bqhl", probs, c_kv)     # compressed context
     o = jnp.einsum("bqhl,lhv->bqhv", o_c, p["w_uv"])    # absorb W_uv

@@ -213,6 +213,11 @@ class ModelBundle:
     def decode_step(self, params, batch):
         return T.decode_step(params, self.cfg, batch)
 
+    def chunk_step(self, params, batch):
+        """Serving prefill chunk: batch = {tokens (B, C), pos, n_valid,
+        cache} — see transformer.chunk_step."""
+        return T.chunk_step(params, self.cfg, batch)
+
     def input_specs(self, shape: ShapeSpec, concrete: bool = False,
                     key=None):
         return make_inputs(self.cfg, shape, concrete, key)
@@ -225,11 +230,17 @@ class ModelBundle:
         return self.decode_step
 
 
-def pad_cache(cfg: ModelConfig, cache, extra: int):
-    """Grow every cache_seq dimension by `extra` zero slots (decode room)."""
+def _flatten_with_axes(cfg: ModelConfig, cache):
+    """(flat leaves, flat logical-axes tuples, treedef) for a cache pytree."""
     axes = cache_axes(cfg)
     flat_c, treedef = jax.tree.flatten(cache)
     flat_a = treedef.flatten_up_to(axes)
+    return flat_c, flat_a, treedef
+
+
+def pad_cache(cfg: ModelConfig, cache, extra: int):
+    """Grow every cache_seq dimension by `extra` zero slots (decode room)."""
+    flat_c, flat_a, treedef = _flatten_with_axes(cfg, cache)
     out = []
     for c, a in zip(flat_c, flat_a):
         if isinstance(a, tuple) and "cache_seq" in a:
@@ -237,6 +248,66 @@ def pad_cache(cfg: ModelConfig, cache, extra: int):
             widths[a.index("cache_seq")] = (0, extra)
             c = jnp.pad(c, widths)
         out.append(c)
+    return jax.tree.unflatten(treedef, out)
+
+
+# ---------------------------------------------------------------------------
+# Slot API (continuous-batching serving, repro.serve)
+#
+# A "slot cache" is an ordinary decode cache built with batch = n_slots:
+# every leaf carries a cache_batch dimension indexing the slot.  Requests
+# come and go by writing / zeroing ONE row of every leaf — all three ops
+# are O(row), jit-traceable with a *traced* slot index, and leave the other
+# slots' rows byte-identical (the differential suite in tests/test_serve.py
+# pins that invariant).
+# ---------------------------------------------------------------------------
+def _slot_update(cfg: ModelConfig, cache, rows, slot, valid):
+    """Write per-leaf `rows` (size-1 cache_batch dim) into slot `slot`.
+
+    `valid` (bool scalar, traced ok) gates the write per leaf by re-writing
+    the CURRENT row when False — a no-op admission costs one O(row)
+    gather/scatter instead of an O(cache) select, which matters inside a
+    donated decode step."""
+    flat_c, flat_a, treedef = _flatten_with_axes(cfg, cache)
+    out = []
+    for c, a, new in zip(flat_c, flat_a, rows):
+        bdim = a.index("cache_batch")
+        cur = jax.lax.dynamic_index_in_dim(c, slot, axis=bdim,
+                                           keepdims=True)
+        row = jnp.where(valid, new.astype(c.dtype), cur)
+        out.append(jax.lax.dynamic_update_index_in_dim(c, row, slot,
+                                                       axis=bdim))
+    return jax.tree.unflatten(treedef, out)
+
+
+def write_slot(cfg: ModelConfig, cache, req_cache, slot,
+               valid: bool | jax.Array = True):
+    """Admit one request: copy `req_cache` (a batch-1 cache whose seq dims
+    already match the slot cache) into slot `slot`.  `slot` and `valid` may
+    be traced — serving folds admission into the jitted decode step."""
+    rows, _, _ = _flatten_with_axes(cfg, req_cache)
+    return _slot_update(cfg, cache, rows, slot, valid)
+
+
+def evict_slot(cfg: ModelConfig, cache, slot,
+               valid: bool | jax.Array = True):
+    """Zero slot `slot` (freed capacity; decode masks it out regardless —
+    eviction exists so leaked state can never alias a later admission)."""
+    flat_c, flat_a, _ = _flatten_with_axes(cfg, cache)
+    rows = []
+    for c, a in zip(flat_c, flat_a):
+        shape = list(c.shape)
+        shape[a.index("cache_batch")] = 1
+        rows.append(jnp.zeros(shape, c.dtype))
+    return _slot_update(cfg, cache, rows, slot, valid)
+
+
+def read_slot(cfg: ModelConfig, cache, slot):
+    """Extract slot `slot` as a batch-1 cache (debug / tests / migration)."""
+    flat_c, flat_a, treedef = _flatten_with_axes(cfg, cache)
+    out = [jax.lax.dynamic_index_in_dim(c, slot, axis=a.index("cache_batch"),
+                                        keepdims=True)
+           for c, a in zip(flat_c, flat_a)]
     return jax.tree.unflatten(treedef, out)
 
 

@@ -74,11 +74,14 @@ class ModelConfig:
     #   optical MAC (8-bit OSA bit-serial emulation; Pallas kernel on TPU)
     cache_dtype: Any = jnp.bfloat16
     norm_eps: float = 1e-6
+    uniform_decode: bool = True  # False -> continuous-batching serving:
+    #   per-sequence ragged positions (scatter cache writes; repro.serve)
 
     @property
     def attn(self) -> L.AttnConfig:
         return L.AttnConfig(self.d_model, self.n_heads, self.n_kv_heads,
-                            self.head_dim, self.qk_norm, self.rope_theta)
+                            self.head_dim, self.qk_norm, self.rope_theta,
+                            uniform_decode=self.uniform_decode)
 
     @property
     def is_encdec(self) -> bool:
@@ -132,9 +135,13 @@ def _ffn_apply(p: dict, cfg: ModelConfig, x: jax.Array,
     if cfg.moe is None:
         if cfg.rosa_mlp:
             # step = (traced) layer index: layers in a scanned stack
-            # must fold independent noise keys (see mlp_apply)
-            return L.mlp_apply(p, x, engine=rosa.Engine.from_config(),
-                               step=step)
+            # must fold independent noise keys (see mlp_apply).  An
+            # installed engine context (rosa.use_engine) wins: serving pins
+            # a fabricated chip + hybrid plan + ledger there.
+            engine = rosa.current_engine()
+            if engine is None:
+                engine = rosa.Engine.from_config()
+            return L.mlp_apply(p, x, engine=engine, step=step)
         return L.mlp_apply(p, x)
     ctx = current_ctx()
     if cfg.moe_ep and ctx is not None and ctx.mesh is not None:
@@ -586,6 +593,75 @@ def decode_step(params, cfg: ModelConfig, batch: dict):
     x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
     logits = logits_of(params, cfg, x)[:, 0]
     new_cache["pos"] = pos + 1
+    if "memory_pos" in cache and "memory_pos" not in new_cache:
+        new_cache["memory_pos"] = cache["memory_pos"]
+    return logits, new_cache
+
+
+def chunk_step(params, cfg: ModelConfig, batch: dict):
+    """Prefill one chunk of C tokens against a running per-sequence cache.
+
+    batch = {tokens (B, C), pos (B,), n_valid (B,), cache}; positions
+    pos..pos+C-1 are written into the cache, `pos` advances by `n_valid`
+    (the real token count — the chunk tail may be padding), and the
+    returned logits (B, V) are read at local index n_valid-1, i.e. at the
+    last REAL token.  Serving uses this to stream long prompts through the
+    decode path chunk-by-chunk (repro.serve) so a long prefill never
+    stalls running decodes for more than one chunk's latency.
+
+    Supported for attention-cache families (dense/moe/mla_moe/encdec);
+    ssm/hybrid prompts must prefill whole (their scan state has no
+    positional indexing to chunk against).
+    """
+    if cfg.family in ("ssm", "hybrid"):
+        raise ValueError(f"chunked prefill unsupported for {cfg.family}: "
+                         "state-space caches admit no positional chunking")
+    tokens, n_valid = batch["tokens"], batch["n_valid"]
+    cache = batch["cache"]
+    # pos defaults to the cache's own cursor so callers can donate the
+    # cache without aliasing its pos buffer into a second operand
+    pos = batch.get("pos", cache["pos"])
+    x = L.embed_apply(params["embed"], tokens)
+    x = shard_act(x, "batch", None, None)
+    meta = layer_meta(cfg)
+
+    if cfg.family == "encdec":
+        def body(carry, xs):
+            p_l, m_l, c_l = xs
+            carry, c_l = _block_decode(p_l, cfg, carry, pos, m_l, c_l,
+                                       memory_pos=cache["memory_pos"])
+            return carry, c_l
+        x, lcache = jax.lax.scan(body, x, (params["layers"],
+                                           _stub_meta(cfg, cfg.n_layers),
+                                           cache["layers"]))
+        new_cache = {"layers": lcache, "memory_pos": cache["memory_pos"]}
+    else:
+        new_cache = {}
+        if cfg.first_dense_ff:
+            dense0 = dataclasses.replace(cfg, moe=None,
+                                         d_ff=cfg.first_dense_ff)
+            no_meta = {"window": jnp.zeros((), jnp.int32),
+                       "theta": jnp.float32(cfg.rope_theta)}
+            x, new_cache["layer0"] = _block_decode(
+                params["layer0"], dense0, x, pos, no_meta, cache["layer0"])
+            meta = jax.tree.map(lambda a: a[1:], meta)
+
+        def body(carry, xs):
+            p_l, m_l, c_l = xs
+            carry, c_l = _block_decode(p_l, cfg, carry, pos, m_l, c_l)
+            return carry, c_l
+
+        x, new_cache["layers"] = jax.lax.scan(
+            body, x, (params["layers"], meta, cache["layers"]))
+
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    # unembed ONLY the last real token of each row (C-fold cheaper than a
+    # full-chunk logits_of, and identical numerics at that position)
+    idx = jnp.maximum(n_valid - 1, 0)[:, None, None]
+    x_last = jnp.take_along_axis(x, jnp.broadcast_to(
+        idx, (x.shape[0], 1, x.shape[2])), axis=1)
+    logits = logits_of(params, cfg, x_last)[:, 0]
+    new_cache["pos"] = pos + n_valid
     if "memory_pos" in cache and "memory_pos" not in new_cache:
         new_cache["memory_pos"] = cache["memory_pos"]
     return logits, new_cache

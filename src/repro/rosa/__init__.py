@@ -38,12 +38,14 @@ Migration from the pre-Engine API:
 from repro.rosa.backends import (DEFAULT, RosaConfig, backend_names,
                                  make_backend, register_backend,
                                  resolve_backend, rosa_matmul)
-from repro.rosa.engine import Engine, layer_key
+from repro.rosa.engine import (Engine, current_engine, layer_key,
+                               use_engine)
 from repro.rosa.ledger import EnergyLedger, MatmulEvent
 from repro.rosa.plan import ExecutionPlan
 
 __all__ = [
     "DEFAULT", "Engine", "EnergyLedger", "ExecutionPlan", "MatmulEvent",
-    "RosaConfig", "backend_names", "layer_key", "make_backend",
-    "register_backend", "resolve_backend", "rosa_matmul",
+    "RosaConfig", "backend_names", "current_engine", "layer_key",
+    "make_backend", "register_backend", "resolve_backend", "rosa_matmul",
+    "use_engine",
 ]

@@ -54,6 +54,11 @@ class RosaConfig:
     osa_cfg: osa.OSAConfig = osa.IDEAL_OSA
     mrr_params: mrr.MRRParams = mrr.DEFAULT_PARAMS
     backend: str = "auto"   # registered backend name, or "auto" (platform)
+    act_per_vector: bool = False  # quantize each activation ROW at its own
+    #   full-scale.  Default False preserves historic QAT numerics; serving
+    #   (repro.serve) turns it on so a request's logits cannot depend on
+    #   which other requests share its decode batch (per-tensor scales
+    #   couple rows through one absmax — the differential suite caught it)
 
     @property
     def qcfg(self) -> quant.QuantConfig:
@@ -105,7 +110,8 @@ def _dense_backend(x: jax.Array, w: jax.Array, cfg=None) -> jax.Array:
 
 @register_backend("ref")
 def _ref_backend(x: jax.Array, w: jax.Array, cfg: RosaConfig) -> jax.Array:
-    return osa.osa_matmul_ref(x, w, cfg.osa_cfg, cfg.qcfg)
+    return osa.osa_matmul_ref(x, w, cfg.osa_cfg, cfg.qcfg,
+                              per_vector=cfg.act_per_vector)
 
 
 @register_backend("pallas")
@@ -113,7 +119,8 @@ def _pallas_backend(x: jax.Array, w: jax.Array, cfg: RosaConfig) -> jax.Array:
     # deferred import: pulls in jax.experimental.pallas only when routed here
     from repro.kernels.osa_matmul import ops as osa_ops
     return osa_ops.osa_matmul(x, w, quant_bits=cfg.quant_bits,
-                              pam_bits=cfg.pam_bits)
+                              pam_bits=cfg.pam_bits,
+                              per_vector=cfg.act_per_vector)
 
 
 # ---------------------------------------------------------------------------
@@ -134,19 +141,18 @@ def _noisy_realize(t: jax.Array, cfg: RosaConfig, key: jax.Array | None,
     (M, K) row at its own DAC full-scale — batch outliers must not
     compress every other sample's analog resolution.
     """
-    if per_vector and t.ndim >= 2:
-        scale = jnp.maximum(jnp.max(jnp.abs(t), axis=-1, keepdims=True),
-                            1e-8)
-    else:
-        scale = jnp.maximum(jnp.max(jnp.abs(t)), 1e-8)
+    scale = quant.absmax_scale(t, per_vector)
     q = quant.fake_quant(t / scale, cfg.qcfg)          # 8-bit grid in [-1,1]
     w = mrr.realize_weights(q, key, cfg.mrr_params, cfg.noise, var)
     return w * scale
 
 
-def _digital_path(t: jax.Array, cfg: RosaConfig):
-    """Exact digital EO encoding: quantization is the only error source."""
-    return quant.fake_quant(t, cfg.qcfg)
+def _digital_path(t: jax.Array, cfg: RosaConfig,
+                  per_vector: bool = False):
+    """Exact digital EO encoding: quantization is the only error source.
+    `per_vector` applies to the streamed (activation) operand only —
+    weights always share one programmed full-scale."""
+    return quant.fake_quant(t, cfg.qcfg, per_vector=per_vector)
 
 
 def _expand_lanes(var: mrr.StaticVariation | None, t: jax.Array):
@@ -175,7 +181,7 @@ def _analog_operand(t: jax.Array, cfg: RosaConfig, key: jax.Array | None,
     noise + static variation, optionally convex-blended against the exact
     digital path by a traced `gate` in [0, 1] (the vectorized
     perturb-one-layer selector of `repro.robust.sensitivity`)."""
-    clean = _digital_path(t, cfg)
+    clean = _digital_path(t, cfg, per_vector and cfg.act_per_vector)
     if cfg.noise.is_ideal and var is None and gate is None:
         return clean
     noisy = _noisy_realize(t, cfg, key, var, per_vector)
@@ -216,7 +222,8 @@ def _forward(x: jax.Array, w: jax.Array, cfg: RosaConfig,
             # even when it would resolve to pallas on TPU, while an EXPLICIT
             # "ref"/"pallas" request always runs its registered pipeline.
             # ("dense" is algebraically the shortcut itself.)
-            return _digital_path(x, cfg) @ _digital_path(w, cfg)
+            return _digital_path(x, cfg, cfg.act_per_vector) \
+                @ _digital_path(w, cfg)
         bname, contract = resolve_backend(cfg.backend)
         if mgate is not None:
             # mapping superposition: realize BOTH orientations and blend the
@@ -229,10 +236,12 @@ def _forward(x: jax.Array, w: jax.Array, cfg: RosaConfig,
             w_ws = _analog_operand(w, cfg, k_w, _expand_lanes(var, w), gate)
             x_is = _analog_operand(x, cfg, k_x, var, gate, per_vector=True)
             w_eff = (1.0 - mgate) * w_ws + mgate * _digital_path(w, cfg)
-            x_eff = (1.0 - mgate) * _digital_path(x, cfg) + mgate * x_is
+            x_eff = (1.0 - mgate) * _digital_path(x, cfg,
+                                                  cfg.act_per_vector) \
+                + mgate * x_is
         elif cfg.mapping in (Mapping.WS, Mapping.GEMM):
             w_eff = _analog_operand(w, cfg, key, _expand_lanes(var, w), gate)
-            x_eff = _digital_path(x, cfg)
+            x_eff = _digital_path(x, cfg, cfg.act_per_vector)
         else:  # IS: inputs on the analog rings, weights exact digital
             w_eff = _digital_path(w, cfg)
             x_eff = _analog_operand(x, cfg, key, var, gate, per_vector=True)

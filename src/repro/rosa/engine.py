@@ -23,6 +23,7 @@ Usage:
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import zlib
 from typing import Iterable, Mapping as TMapping
@@ -37,6 +38,32 @@ from repro.rosa.backends import (DEFAULT, RosaConfig, condition_weight,
                                  rosa_matmul)
 from repro.rosa.ledger import EnergyLedger
 from repro.rosa.plan import ExecutionPlan
+
+
+_ENGINE_STACK: list["Engine"] = []
+
+
+def current_engine() -> "Engine | None":
+    """The innermost engine installed by `use_engine`, or None.
+
+    Model code that routes matmuls optically but takes no engine parameter
+    (e.g. a scanned transformer stack with `rosa_mlp=True`) resolves its
+    engine here at TRACE time — so a serving loop can pin one fabricated
+    chip (`Engine.with_variation`), a hybrid mapping plan and an
+    `EnergyLedger` without threading the engine through every model
+    signature.  Keep the context active around the `jax.jit` call: it is
+    consulted while tracing, not at run time."""
+    return _ENGINE_STACK[-1] if _ENGINE_STACK else None
+
+
+@contextlib.contextmanager
+def use_engine(engine: "Engine"):
+    """Install `engine` as the ambient optical engine for model code."""
+    _ENGINE_STACK.append(engine)
+    try:
+        yield engine
+    finally:
+        _ENGINE_STACK.pop()
 
 
 def layer_key(base: jax.Array, name: str, step: int | jax.Array = 0

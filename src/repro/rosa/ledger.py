@@ -21,6 +21,7 @@ A jit cache *hit* re-runs no Python and records nothing; trace once (or use
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 
 from repro.core import energy as E
@@ -39,6 +40,7 @@ class MatmulEvent:
     mapping: Mapping
     mode: ComputeMode
     backend: str
+    tag: str = ""          # attribution scope (e.g. "prefill" / "decode")
 
     def layer_shape(self) -> E.LayerShape:
         return E.LayerShape(self.name, m=self.m, k=self.k, n=self.n,
@@ -46,16 +48,32 @@ class MatmulEvent:
 
 
 class EnergyLedger:
-    """Accumulates MatmulEvents and prices them with core.energy."""
+    """Accumulates MatmulEvents and prices them with core.energy.
+
+    `scope(tag)` attributes every matmul recorded inside it to `tag` —
+    serving traces its prefill and decode steps under distinct scopes, so
+    per-request energy (prompt energy + tokens x decode-step energy) can be
+    re-aggregated from one ledger without re-tracing."""
 
     def __init__(self):
         self.events: list[MatmulEvent] = []
+        self._tag = ""
+
+    @contextlib.contextmanager
+    def scope(self, tag: str):
+        """Attribute events recorded inside to `tag` (trace-time, nestable)."""
+        prev, self._tag = self._tag, tag
+        try:
+            yield self
+        finally:
+            self._tag = prev
 
     def record(self, name: str, m: int, k: int, n: int,
                cfg: RosaConfig) -> None:
         self.events.append(MatmulEvent(
             name=name, m=m, k=k, n=n,
-            mapping=cfg.mapping, mode=cfg.mode, backend=cfg.backend))
+            mapping=cfg.mapping, mode=cfg.mode, backend=cfg.backend,
+            tag=self._tag))
 
     def clear(self) -> None:
         self.events.clear()
@@ -64,38 +82,64 @@ class EnergyLedger:
         return len(self.events)
 
     # -- views --------------------------------------------------------------
-    def unique_events(self) -> list[MatmulEvent]:
+    def unique_events(self, tag: str | None = None) -> list[MatmulEvent]:
         """The 'network' view used for EDP: one event per distinct
-        (name, GEMM shape, mapping, mode), order preserved.  Re-traces and
-        MC loops of the same layer dedupe to one event; the same name traced
-        at a DIFFERENT shape (e.g. a prefill trace then a decode trace) is a
-        distinct workload and keeps its own event rather than being silently
-        discarded — clear() between traces if you want only the latest."""
+        (name, GEMM shape, mapping, mode, tag), order preserved.  Re-traces
+        and MC loops of the same layer dedupe to one event; the same name
+        traced at a DIFFERENT shape (e.g. a prefill trace then a decode
+        trace) is a distinct workload and keeps its own event rather than
+        being silently discarded — clear() between traces if you want only
+        the latest.  `tag` filters to one attribution scope."""
         seen: dict[tuple, MatmulEvent] = {}
         for ev in self.events:
-            seen[(ev.name, ev.m, ev.k, ev.n, ev.mapping, ev.mode)] = ev
+            if tag is not None and ev.tag != tag:
+                continue
+            seen[(ev.name, ev.m, ev.k, ev.n, ev.mapping, ev.mode,
+                  ev.tag)] = ev
         return list(seen.values())
 
-    def layer_shapes(self) -> list[E.LayerShape]:
-        return [ev.layer_shape() for ev in self.unique_events()]
+    def layer_shapes(self, tag: str | None = None) -> list[E.LayerShape]:
+        return [ev.layer_shape() for ev in self.unique_events(tag)]
 
-    def mapping_plan(self) -> dict[str, Mapping]:
-        return {ev.name: ev.mapping for ev in self.unique_events()}
+    def mapping_plan(self, tag: str | None = None) -> dict[str, Mapping]:
+        return {ev.name: ev.mapping for ev in self.unique_events(tag)}
 
     # -- pricing ------------------------------------------------------------
     def breakdown(self, ope: OPEConfig,
                   osa: E.OSAEnergyConfig = E.OSA_OPTIMAL,
-                  batch: int = 1, dedupe: bool = True) -> E.EnergyBreakdown:
+                  batch: int = 1, dedupe: bool = True,
+                  tag: str | None = None) -> E.EnergyBreakdown:
         """Price the trace on an OPE fleet.  With dedupe (default) each named
         layer counts once — the sequential-network semantics of
-        core.energy.network_energy; without it every recorded call counts."""
-        events = self.unique_events() if dedupe else self.events
+        core.energy.network_energy; without it every recorded call counts.
+        `tag` restricts pricing to one attribution scope."""
+        if dedupe:
+            events = self.unique_events(tag)
+        else:
+            events = [ev for ev in self.events
+                      if tag is None or ev.tag == tag]
         total = E.EnergyBreakdown(name="trace")
         for ev in events:
             total = total + E.layer_energy(ev.layer_shape(), ope,
                                            ev.mapping, ev.mode, osa,
                                            batch=batch)
         return total
+
+    def per_token(self, ope: OPEConfig,
+                  osa: E.OSAEnergyConfig = E.OSA_OPTIMAL,
+                  batch: int = 1, tag: str | None = "decode") -> float:
+        """Energy [J] attributed to ONE generated token of ONE sequence.
+
+        Prices the (deduped) events under `tag` — canonically the serving
+        decode-step trace, which computes one token for each of `batch`
+        concurrent slots — and splits the step energy evenly across the
+        slots.  The traced events ALREADY carry the slot concurrency in
+        their m dimension, so the trace is priced as-is (batch=1 —
+        passing `batch` into layer_energy again would double-count it)
+        and only the division spreads it over the slots.  This is the
+        number `serve_smoke` exports as energy_per_token_j."""
+        bd = self.breakdown(ope, osa, batch=1, tag=tag)
+        return bd.energy / max(batch, 1)
 
     def edp(self, ope: OPEConfig, osa: E.OSAEnergyConfig = E.OSA_OPTIMAL,
             batch: int = 1, dedupe: bool = True) -> float:
@@ -118,7 +162,7 @@ class EnergyLedger:
             "events": [
                 {"name": ev.name, "m": ev.m, "k": ev.k, "n": ev.n,
                  "mapping": ev.mapping.value, "mode": ev.mode.value,
-                 "backend": ev.backend}
+                 "backend": ev.backend, "tag": ev.tag}
                 for ev in self.unique_events()
             ],
             "totals": bd.as_dict(),

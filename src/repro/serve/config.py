@@ -1,0 +1,81 @@
+"""Serving configuration: slots, chunking, sampling, optical engine.
+
+`ServeConfig` is the one knob-bundle the whole subsystem reads; it is
+frozen/hashable so jitted step factories can close over it safely.
+`serving_model_config` derives the serving variant of a `ModelConfig`:
+continuous batching decodes at RAGGED per-slot positions, so every
+attention cache write must take the scatter path (`uniform_decode=False`)
+— including MLA's compressed cache.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.models.transformer import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    """Continuous-batching serving knobs.
+
+    n_slots        concurrent sequences in the decode batch (slot count)
+    max_len        per-slot cache capacity: prompt + generated tokens
+    prefill_chunk  tokens per prefill chunk — bounds how long one queued
+                   prompt can stall the running decode batch
+    temperature    sampling temperature (0 = greedy).  Traced at call time:
+                   changing it never recompiles the step.
+    seed           base PRNG seed; per-token sampling keys fold
+                   (request id, token index) so a request's sample stream
+                   is invariant to HOW it was scheduled
+    collect_logits serving step also returns per-slot logits (tests)
+    evict_on_done  zero a slot's cache rows when its request completes
+                   (admission overwrites anyway; this guarantees freed
+                   state never outlives its request)
+    rosa           route MLP projections through the optical engine
+                   (`rosa.use_engine` context installed around the jitted
+                   steps), with a layer-wise hybrid mapping plan searched
+                   on the decode trace and an optional pinned chip
+    rosa_backend   contraction backend name for the optical path
+    variation_seed pin ONE sampled fabricated chip (repro.robust
+                   StaticVariation) for every decode; None = ideal device
+    """
+
+    n_slots: int = 4
+    max_len: int = 64
+    prefill_chunk: int = 8
+    temperature: float = 0.0
+    seed: int = 0
+    collect_logits: bool = False
+    evict_on_done: bool = False
+    rosa: bool = False
+    rosa_backend: str = "ref"
+    variation_seed: int | None = None
+
+    def __post_init__(self):
+        if self.n_slots < 1:
+            raise ValueError("n_slots must be >= 1")
+        if self.prefill_chunk < 1:
+            raise ValueError("prefill_chunk must be >= 1")
+        if self.max_len < self.prefill_chunk:
+            raise ValueError("max_len must be >= prefill_chunk")
+
+
+def serving_model_config(cfg: ModelConfig, rosa: bool = False) -> ModelConfig:
+    """The serving variant of a model config: ragged (scatter) cache writes
+    everywhere, and optionally the optical MLP path enabled.
+
+    Encoder-decoder families are rejected: the serving prefill has no
+    encoder pass, so their requests would silently cross-attend to an
+    all-zero memory."""
+    if cfg.is_encdec:
+        raise NotImplementedError(
+            f"{cfg.name}: encoder-decoder serving is not supported — the "
+            "request path has no encoder invocation (prompts are token "
+            "ids, not source embeddings)")
+    kw: dict = {"uniform_decode": False}
+    if cfg.mla is not None:
+        kw["mla"] = dataclasses.replace(cfg.mla, uniform_decode=False)
+    if rosa:
+        kw["rosa_mlp"] = True
+    return dataclasses.replace(cfg, **kw)

@@ -1,0 +1,192 @@
+"""Serving metrics: throughput/latency summaries + per-token energy.
+
+Everything gated in CI is DETERMINISTIC by construction:
+
+  * throughput is counted in step units (decode steps + prefill chunks),
+    and token counts are budget-driven — neither depends on sampled token
+    VALUES, so the numbers survive jax/platform changes;
+  * latency percentiles are in scheduler ticks;
+  * energy comes from pricing the decode-step trace (`EnergyLedger` under
+    a "decode" scope) with the paper's analytical model — pure shape math.
+
+Wall-clock tokens/sec are recorded alongside, ungated.
+
+`build_serving_engine` is the Engine-aware serving story: trace the decode
+step once to discover its GEMMs, search the layer-wise hybrid IS/WS plan on
+those shapes (paper Sec. 3.5, EDP term), optionally pin ONE fabricated chip
+(`repro.robust` static variation) — and serve every token through that
+frozen (plan, chip) pair.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.bench.schema import Metric
+from repro.core.constants import ROSA_OPTIMAL, Mapping
+from repro.serve.config import ServeConfig
+from repro.serve.scheduler import Scheduler, ServeReport
+
+
+def _abstract_decode_batch(cfg, scfg: ServeConfig):
+    from repro.models import transformer as T
+    s = scfg.n_slots
+    cache = jax.eval_shape(lambda: T.init_cache(cfg, s, scfg.max_len))
+    return {"token": jax.ShapeDtypeStruct((s,), jnp.int32),
+            "pos": jax.ShapeDtypeStruct((s,), jnp.int32),
+            "cache": cache}
+
+
+def _abstract_chunk_batch(cfg, scfg: ServeConfig):
+    from repro.models import transformer as T
+    cache = jax.eval_shape(lambda: T.init_cache(cfg, 1, scfg.max_len))
+    return {"tokens": jax.ShapeDtypeStruct((1, scfg.prefill_chunk),
+                                           jnp.int32),
+            "n_valid": jax.ShapeDtypeStruct((1,), jnp.int32),
+            "cache": cache}
+
+
+def trace_serving_shapes(bundle, scfg: ServeConfig, engine):
+    """Trace decode step (+ one prefill chunk when the family supports it)
+    under `engine`'s ledger with "decode"/"prefill" attribution scopes."""
+    from repro import rosa
+    ledger = engine.ledger
+    params = bundle.abstract(jnp.float32)
+    with rosa.use_engine(engine):
+        with ledger.scope("decode"):
+            jax.eval_shape(bundle.decode_step, params,
+                           _abstract_decode_batch(bundle.cfg, scfg))
+        if bundle.cfg.family not in ("ssm", "hybrid"):
+            with ledger.scope("prefill"):
+                jax.eval_shape(bundle.chunk_step, params,
+                               _abstract_chunk_batch(bundle.cfg, scfg))
+    return ledger
+
+
+def build_serving_engine(bundle, scfg: ServeConfig, with_ledger: bool = True):
+    """Engine for serving: hybrid plan searched on the decode trace,
+    optional pinned chip, fresh `EnergyLedger` attached."""
+    from repro import rosa
+    from repro.core import mapping as M
+
+    # act_per_vector: a request's numerics must not depend on which other
+    # requests share its decode batch (per-tensor activation scales couple
+    # rows; tests/test_serve.py::test_rosa_differential pins this)
+    base = rosa.RosaConfig(backend=scfg.rosa_backend, act_per_vector=True)
+    # discovery pass: uniform WS engine, just to see the decode GEMMs
+    probe = rosa.Engine.from_config(base, ledger=rosa.EnergyLedger())
+    trace_serving_shapes(bundle, scfg, probe)
+    shapes = probe.ledger.layer_shapes(tag="decode")
+    # the traced GEMMs already carry the slot batch in m — batch=1 here,
+    # or the concurrency would be priced twice
+    plan = M.hybrid_plan(M.profile_layers_fast(shapes, ROSA_OPTIMAL,
+                                               batch=1))
+    names = [s.name for s in shapes]
+    engine = rosa.Engine.from_hybrid_plan(base, plan, layers=names)
+    if scfg.variation_seed is not None:
+        from repro.robust import variation as V
+        chip = V.sample_chip(jax.random.PRNGKey(scfg.variation_seed),
+                             dims={s.name: s.k for s in shapes})
+        engine = engine.with_variation(chip)
+    if with_ledger:
+        engine = engine.with_ledger(rosa.EnergyLedger())
+    return engine
+
+
+def energy_metrics(model_cfg, scfg: ServeConfig) -> list[Metric]:
+    """Per-token / per-chunk energy of the optical serving path, plus the
+    hybrid-vs-WS decode EDP ratio the plan search bought."""
+    from repro.core import mapping as M
+    from repro.models.model import build_model
+    from repro.serve.config import serving_model_config
+
+    bundle = build_model(serving_model_config(model_cfg, rosa=True))
+    engine = build_serving_engine(bundle, scfg)
+    ledger = trace_serving_shapes(bundle, scfg, engine)
+    shapes = ledger.layer_shapes(tag="decode")
+    plan = {s.name: engine.config(s.name).mapping for s in shapes}
+    # batch=1: the decode-step trace already encodes n_slots in each m
+    e_hybrid = M.plan_edp(shapes, plan, ROSA_OPTIMAL, batch=1)
+    e_ws = M.plan_edp(shapes, {s.name: Mapping.WS for s in shapes},
+                      ROSA_OPTIMAL, batch=1)
+    out = [
+        Metric("energy_per_token_j",
+               ledger.per_token(ROSA_OPTIMAL, batch=scfg.n_slots,
+                                tag="decode"),
+               unit="J", gate=True, rel_tol=1e-3,
+               direction="lower_is_better"),
+        Metric("decode_edp_hybrid_vs_ws", e_hybrid / e_ws, unit="ratio",
+               gate=True, rel_tol=1e-3, direction="lower_is_better"),
+        Metric("decode_is_layers",
+               sum(1 for m in plan.values() if m is Mapping.IS),
+               gate=True, rel_tol=0.0),
+    ]
+    prefill = ledger.breakdown(ROSA_OPTIMAL, batch=1, tag="prefill")
+    if prefill.energy > 0:
+        out.append(Metric("energy_per_prefill_chunk_j", prefill.energy,
+                          unit="J", gate=True, rel_tol=1e-3,
+                          direction="lower_is_better"))
+    return out
+
+
+def report_metrics(rep: ServeReport, prefix: str = "",
+                   gate: bool = True) -> list[Metric]:
+    """Throughput/latency metrics of one scheduler run.  Step-unit and
+    tick metrics gate; wall-clock ones never do."""
+    p = prefix
+    return [
+        Metric(f"{p}total_tokens", rep.total_tokens, gate=gate,
+               rel_tol=0.0),
+        Metric(f"{p}tokens_per_unit", rep.tokens_per_unit, unit="tok/step",
+               gate=gate, rel_tol=1e-6, direction="higher_is_better"),
+        Metric(f"{p}occupancy", rep.occupancy, unit="frac", gate=gate,
+               rel_tol=1e-6, direction="higher_is_better"),
+        Metric(f"{p}latency_p50_ticks", rep.percentile(50), unit="ticks",
+               gate=gate, rel_tol=1e-6, direction="lower_is_better"),
+        Metric(f"{p}latency_p99_ticks", rep.percentile(99), unit="ticks",
+               gate=gate, rel_tol=1e-6, direction="lower_is_better"),
+        Metric(f"{p}ttft_p50_ticks", rep.percentile(50, "ttft"),
+               unit="ticks", gate=gate, rel_tol=1e-6,
+               direction="lower_is_better"),
+        Metric(f"{p}tokens_per_s", rep.tokens_per_s, unit="tok/s"),
+        Metric(f"{p}wall_s", rep.wall_s, unit="s"),
+    ]
+
+
+def smoke_report(arch: str = "qwen3-32b", n_requests: int = 24,
+                 rate: float = 1.0, scfg: ServeConfig | None = None,
+                 seed: int = 0) -> list[Metric]:
+    """The `serve_smoke` bench: a Poisson stream served continuous vs
+    one-shot on the smoke arch; gates continuous throughput, the >= 1.5x
+    continuous/one-shot ratio, latency percentiles and per-token energy.
+
+    The workload is deliberately RAGGED (generation budgets 2..40): that is
+    the regime continuous batching exists for — a static batch decodes
+    max(budget) steps while its short requests idle, continuous refills
+    their slots the next tick."""
+    from repro.configs import get_smoke
+
+    from repro.serve.loadgen import poisson_requests
+
+    cfg = get_smoke(arch)
+    scfg = scfg or ServeConfig(n_slots=4, max_len=56, prefill_chunk=8,
+                               seed=seed)
+    sched = Scheduler(cfg, scfg, init_seed=seed)
+    reqs = poisson_requests(n_requests, rate, vocab=cfg.vocab,
+                            prompt_len=(4, 8), gen_len=(2, 40), seed=seed)
+    ones = sched.run(reqs, policy="oneshot")     # first run eats compile
+    cont = sched.run(reqs, policy="continuous")
+
+    out = report_metrics(cont, prefix="cont_")
+    out += [m for m in report_metrics(ones, prefix="oneshot_", gate=False)
+            if m.name in ("oneshot_tokens_per_unit", "oneshot_occupancy",
+                          "oneshot_tokens_per_s")]
+    out.append(Metric(
+        "throughput_ratio_vs_oneshot",
+        cont.tokens_per_unit / max(ones.tokens_per_unit, 1e-12),
+        unit="x", gate=True, rel_tol=1e-6, direction="higher_is_better"))
+
+    # energy of the same serving shapes through the optical engine
+    out += energy_metrics(cfg, scfg)
+    return out

@@ -1,0 +1,373 @@
+"""Continuous-batching scheduler: slot admission, prefill/decode interleave.
+
+One scheduler drives two admission policies over the SAME jitted step:
+
+  continuous  a completed request's slot is refilled on the very next tick
+              (eviction + refill ride inside the decode step), so the
+              decode batch stays full whenever work is queued;
+  oneshot     the static-batching baseline `launch/serve.py` used to be:
+              wait until a full batch of prefilled requests is ready,
+              admit them together, decode until the LAST one finishes,
+              only then form the next batch.
+
+Each tick runs at most one prefill chunk and one decode step, so cost is
+countable in deterministic step units — `ServeReport` exposes those
+(decode_steps, prefill_chunks, ticks) next to wall-clock times, and the
+`serve_smoke` bench gates on the unit-based throughput ratio, which is
+reproducible across machines.
+
+The per-request oracle `run_sequential` (same prefill path, batch-1 decode,
+same sampling keys) is what the differential suite pins the scheduler
+against: greedy tokens AND logits must match bit-exactly, seeded sampling
+must draw identical tokens.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import heapq
+import time
+from collections import deque
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.model import build_model
+from repro.serve.config import ServeConfig, serving_model_config
+from repro.serve.decode import (PrefillTask, init_state, make_admit,
+                                make_admit_step, make_chunk_fn, make_evict,
+                                make_serve_step, null_admit, sample_token)
+
+
+@dataclasses.dataclass
+class Request:
+    """One serving request; `arrival` is in scheduler ticks."""
+
+    rid: int
+    prompt: np.ndarray
+    max_new_tokens: int
+    arrival: int = 0
+
+    def __post_init__(self):
+        self.prompt = np.asarray(self.prompt, np.int32).reshape(-1)
+        if self.max_new_tokens < 1:
+            raise ValueError("max_new_tokens must be >= 1")
+
+
+@dataclasses.dataclass
+class Completion:
+    rid: int
+    prompt_len: int
+    arrival: int
+    tokens: list = dataclasses.field(default_factory=list)
+    logits: list = dataclasses.field(default_factory=list)
+    first_token_tick: int = -1
+    admit_tick: int = -1
+    done_tick: int = -1
+    done_wall: float = 0.0
+    slot: int = -1
+
+    @property
+    def ttft_ticks(self) -> int:
+        return self.first_token_tick - self.arrival
+
+    @property
+    def latency_ticks(self) -> int:
+        return self.done_tick - self.arrival
+
+
+@dataclasses.dataclass
+class ServeReport:
+    policy: str
+    completions: dict
+    ticks: int = 0
+    decode_steps: int = 0
+    prefill_chunks: int = 0
+    wall_s: float = 0.0
+    n_slots: int = 1
+
+    @property
+    def total_tokens(self) -> int:
+        return sum(len(c.tokens) for c in self.completions.values())
+
+    @property
+    def step_units(self) -> int:
+        """Deterministic cost: every decode step and prefill chunk is one
+        unit of accelerator work."""
+        return self.decode_steps + self.prefill_chunks
+
+    @property
+    def tokens_per_unit(self) -> float:
+        """Useful generated tokens per unit of work — the gated,
+        machine-independent throughput metric."""
+        return self.total_tokens / max(self.step_units, 1)
+
+    @property
+    def occupancy(self) -> float:
+        """Mean fraction of decode-batch slots doing useful work (each
+        request's FIRST token comes from its prefill, not a decode step,
+        so it is excluded)."""
+        decoded = self.total_tokens - sum(
+            1 for c in self.completions.values() if c.tokens)
+        return decoded / max(self.decode_steps * self.n_slots, 1)
+
+    @property
+    def tokens_per_s(self) -> float:
+        return self.total_tokens / max(self.wall_s, 1e-9)
+
+    def latencies(self, kind: str = "latency") -> np.ndarray:
+        vals = [getattr(c, f"{kind}_ticks")
+                for c in self.completions.values()]
+        return np.asarray(sorted(vals), np.float64)
+
+    def percentile(self, q: float, kind: str = "latency") -> float:
+        return float(np.percentile(self.latencies(kind), q))
+
+
+class Scheduler:
+    """Builds the jitted serving machinery once; `run` replays a request
+    list under a policy.  With `scfg.rosa` the optical engine (pinned chip,
+    hybrid plan, energy ledger) is installed for every trace."""
+
+    def __init__(self, model_cfg, scfg: ServeConfig, params=None,
+                 init_seed: int = 0, mesh=None, engine=None):
+        self.cfg = serving_model_config(model_cfg, rosa=scfg.rosa)
+        self.scfg = scfg
+        self.bundle = build_model(self.cfg)
+        self.engine = engine
+        if scfg.rosa and engine is None:
+            from repro.serve.metrics import build_serving_engine
+            self.engine = build_serving_engine(self.bundle, scfg)
+        with self._engine_ctx():
+            self.params = (params if params is not None
+                           else self.bundle.init(jax.random.PRNGKey(init_seed)))
+        self.step = make_serve_step(self.bundle, scfg, mesh=mesh)
+        self.admit_step = make_admit_step(self.bundle, scfg)
+        self.chunk_fn = make_chunk_fn(self.bundle)
+        self.whole_fn = jax.jit(self.bundle.prefill)
+        self.evict = make_evict(self.bundle, scfg) if scfg.evict_on_done \
+            else None
+        self.null = null_admit(self.cfg, scfg)
+        self.sample1 = jax.jit(sample_token)
+        self.base_key = jax.random.PRNGKey(scfg.seed)
+
+    def _engine_ctx(self):
+        if self.engine is None:
+            return contextlib.nullcontext()
+        from repro import rosa
+        return rosa.use_engine(self.engine)
+
+    def _scope(self, tag: str):
+        """Ledger attribution scope around a jitted call site: only the
+        first (tracing) call records, so scoping every tick is free."""
+        return _ledger_scope(self.engine, tag)
+
+    def _check(self, req: Request) -> None:
+        """Fail FAST, before any request is served: these bounds mirror
+        PrefillTask's (prompt < max_len) exactly, so a bad request can
+        never abort the loop mid-stream after others completed."""
+        if len(req.prompt) >= self.scfg.max_len:
+            raise ValueError(
+                f"request {req.rid}: prompt length {len(req.prompt)} >= "
+                f"max_len {self.scfg.max_len}: no decode room")
+        need = len(req.prompt) + req.max_new_tokens - 1
+        if need > self.scfg.max_len:
+            raise ValueError(
+                f"request {req.rid}: prompt {len(req.prompt)} + "
+                f"{req.max_new_tokens} new tokens needs cache {need} > "
+                f"max_len {self.scfg.max_len}")
+
+    # -- the serving loop ---------------------------------------------------
+    def run(self, requests: list[Request], policy: str = "continuous",
+            temperature: float | None = None) -> ServeReport:
+        """`temperature` overrides scfg.temperature — it is a TRACED scalar,
+        so greedy and sampled runs share one compiled step."""
+        if policy not in ("continuous", "oneshot"):
+            raise ValueError(policy)
+        for r in requests:
+            self._check(r)
+        scfg = self.scfg
+        n_slots = scfg.n_slots
+        temp = jnp.float32(scfg.temperature if temperature is None
+                           else temperature)
+
+        completions = {r.rid: Completion(r.rid, len(r.prompt), r.arrival)
+                       for r in requests}
+        pending = deque(sorted(requests, key=lambda r: (r.arrival, r.rid)))
+        prefill_q: deque[Request] = deque()
+        ready: deque[tuple] = deque()        # (req, cache, first_token)
+        inflight: tuple | None = None        # (req, PrefillTask)
+        free = list(range(n_slots))
+        heapq.heapify(free)
+        slot_rid: list[int | None] = [None] * n_slots
+        n_done = 0
+        state = init_state(self.cfg, scfg)
+        rep = ServeReport(policy=policy, completions=completions,
+                          n_slots=n_slots)
+        tick = 0
+        t0 = time.perf_counter()
+
+        with self._engine_ctx():
+            while n_done < len(requests):
+                progressed = False
+                while pending and pending[0].arrival <= tick:
+                    prefill_q.append(pending.popleft())
+
+                # -- one prefill chunk per tick ---------------------------
+                if inflight is None and prefill_q:
+                    req = prefill_q.popleft()
+                    inflight = (req, PrefillTask(self.bundle, scfg,
+                                                 req.prompt, self.chunk_fn,
+                                                 self.whole_fn))
+                if inflight is not None:
+                    req, task = inflight
+                    with self._scope("prefill"):
+                        task.advance(self.params)
+                    rep.prefill_chunks += 1
+                    progressed = True
+                    if task.done:
+                        comp = completions[req.rid]
+                        tok0 = self.sample1(self.base_key, req.rid, 0,
+                                            task.logits, temp)
+                        comp.tokens.append(int(tok0))
+                        comp.first_token_tick = tick
+                        if scfg.collect_logits:
+                            comp.logits.append(np.asarray(task.logits))
+                        if req.max_new_tokens == 1:   # done at prefill
+                            comp.done_tick = tick
+                            comp.done_wall = time.perf_counter() - t0
+                            n_done += 1
+                        else:
+                            ready.append((req, task.cache, tok0))
+                        inflight = None
+
+                # -- admission -------------------------------------------
+                admit = self.null
+                if policy == "continuous":
+                    # refill rides inside the decode step: one per tick
+                    if ready and free:
+                        slot = heapq.heappop(free)
+                        req, cache0, tok0 = ready.popleft()
+                        admit = make_admit(cache0, slot, req.rid, tok0,
+                                           req.max_new_tokens)
+                        slot_rid[slot] = req.rid
+                        completions[req.rid].admit_tick = tick
+                        completions[req.rid].slot = slot
+                else:
+                    # oneshot: once the batch is idle and a full batch (or
+                    # everything that's left) is prefilled, admit it in one
+                    # burst, then decode until the whole batch drains
+                    outstanding = (len(pending) + len(prefill_q)
+                                   + len(ready)
+                                   + (1 if inflight is not None else 0))
+                    if (len(free) == n_slots and ready
+                            and (len(ready) >= min(n_slots, outstanding)
+                                 or (not pending and not prefill_q
+                                     and inflight is None))):
+                        while ready and free:
+                            slot = heapq.heappop(free)
+                            req, cache0, tok0 = ready.popleft()
+                            state = self.admit_step(
+                                state, make_admit(cache0, slot, req.rid,
+                                                  tok0, req.max_new_tokens))
+                            slot_rid[slot] = req.rid
+                            completions[req.rid].admit_tick = tick
+                            completions[req.rid].slot = slot
+                        progressed = True
+
+                # -- one decode step for the whole batch -----------------
+                if any(r is not None for r in slot_rid):
+                    with self._scope("decode"):
+                        state, out = self.step(self.params, state, admit,
+                                               temp)
+                    rep.decode_steps += 1
+                    progressed = True
+                    tok = np.asarray(out["token"])
+                    emitted = np.asarray(out["emitted"])
+                    done = np.asarray(out["done"])
+                    logits = (np.asarray(out["logits"])
+                              if scfg.collect_logits else None)
+                    for s in range(n_slots):
+                        if not emitted[s]:
+                            continue
+                        comp = completions[slot_rid[s]]
+                        comp.tokens.append(int(tok[s]))
+                        if logits is not None:
+                            comp.logits.append(logits[s])
+                        if done[s]:
+                            comp.done_tick = tick
+                            comp.done_wall = time.perf_counter() - t0
+                            n_done += 1
+                            slot_rid[s] = None
+                            heapq.heappush(free, s)
+                            if self.evict is not None:
+                                state = self.evict(state, jnp.int32(s))
+
+                if not progressed:
+                    if pending:                     # idle: jump to arrival
+                        tick = pending[0].arrival
+                        continue
+                    raise RuntimeError("scheduler deadlock")  # pragma: no cover
+                tick += 1
+
+        rep.ticks = tick
+        rep.wall_s = time.perf_counter() - t0
+        return rep
+
+
+def _ledger_scope(engine, tag: str):
+    if engine is not None and engine.ledger is not None:
+        return engine.ledger.scope(tag)
+    return contextlib.nullcontext()
+
+
+# ---------------------------------------------------------------------------
+# Per-request sequential oracle (the differential-test reference)
+# ---------------------------------------------------------------------------
+def run_sequential(model_cfg, scfg: ServeConfig, params,
+                   requests: list[Request], engine=None,
+                   temperature: float | None = None) -> dict:
+    """Decode every request ALONE (batch 1), same prefill path, same
+    sampling keys.  Returns {rid: {"tokens": [...], "logits": [...]}}.
+
+    This is the semantic spec of serving: whatever the continuous scheduler
+    interleaves, each request's stream must equal this oracle's exactly."""
+    cfg = serving_model_config(model_cfg, rosa=scfg.rosa)
+    bundle = build_model(cfg)
+    if scfg.rosa and engine is None:
+        from repro.serve.metrics import build_serving_engine
+        engine = build_serving_engine(bundle, scfg)
+    ctx = contextlib.nullcontext()
+    if engine is not None:
+        from repro import rosa
+        ctx = rosa.use_engine(engine)
+    chunk_fn = make_chunk_fn(bundle)
+    whole_fn = jax.jit(bundle.prefill)
+    decode1 = jax.jit(
+        lambda p, t, c: bundle.decode_step(
+            p, {"token": t, "pos": c["pos"], "cache": c}))
+    sample1 = jax.jit(sample_token)
+    base = jax.random.PRNGKey(scfg.seed)
+    temp = jnp.float32(scfg.temperature if temperature is None
+                       else temperature)
+
+    out = {}
+    with ctx:
+        for req in requests:
+            task = PrefillTask(bundle, scfg, req.prompt, chunk_fn, whole_fn)
+            with _ledger_scope(engine, "prefill"):
+                while not task.advance(params):
+                    pass
+            tok = sample1(base, req.rid, 0, task.logits, temp)
+            toks, logs = [int(tok)], [np.asarray(task.logits)]
+            cache = task.cache
+            for i in range(1, req.max_new_tokens):
+                with _ledger_scope(engine, "decode"):
+                    logits, cache = decode1(params, tok.reshape(1), cache)
+                tok = sample1(base, req.rid, i, logits[0], temp)
+                toks.append(int(tok))
+                logs.append(np.asarray(logits[0]))
+            out[req.rid] = {"tokens": toks, "logits": logs}
+    return out

@@ -1,9 +1,20 @@
-"""Pallas kernels vs pure-jnp oracles (interpret mode, shape/dtype sweeps)."""
+"""Pallas kernels vs pure-jnp oracles (interpret mode, shape/dtype sweeps).
+
+The property sections fuzz the osa_matmul / mrr_transfer kernels against
+their ref.py oracles over randomized shapes, dtypes and edge tiles
+(hypothesis when installed, fixed-sample parametrization otherwise — the
+same guard pattern as tests/test_mrr.py)."""
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+try:                      # degrade gracefully: property tests fall back to
+    import hypothesis as hp            # fixed-sample parametrization when
+    import hypothesis.strategies as st  # hypothesis is not installed
+except ModuleNotFoundError:
+    hp = st = None
 
 from repro.core import mrr, quant
 from repro.kernels.mrr_transfer import ops as mt_ops
@@ -65,6 +76,112 @@ def test_osa_float_entrypoint(key):
     np.testing.assert_allclose(np.asarray(y),
                                np.asarray(quant.fake_quant(x) @ w),
                                rtol=1e-3, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# osa_matmul / mrr_transfer property fuzzing vs ref.py
+# ---------------------------------------------------------------------------
+def _check_osa_parity(m: int, k: int, n: int, bits: int, seed: int,
+                      wdtype=jnp.float32) -> None:
+    """Kernel == oracle for arbitrary (possibly non-tile-aligned) shapes."""
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    cfg = quant.QuantConfig(bits=bits)
+    q = jnp.round(jax.random.uniform(k1, (m, k), minval=-cfg.qmax,
+                                     maxval=cfg.qmax))
+    w = jax.random.normal(k2, (k, n)).astype(wdtype)
+    y = osa_ops.osa_matmul_int(q, w, quant.plane_weights(cfg),
+                               n_planes=cfg.n_planes, bm=8, bn=8, bk=8)
+    y_ref = osa_matmul_ref(q, w, quant_bits=bits)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=1e-4, atol=2e-3)
+
+
+def _check_mrr_ideal_parity(rows: int, cols: int, seed: int,
+                            lo: float, hi: float) -> None:
+    """sigma=0: kernel == oracle exactly (up to interpolation tolerance)
+    for arbitrary shapes, including non-lane-aligned ones."""
+    w = jax.random.uniform(jax.random.PRNGKey(seed), (rows, cols),
+                           minval=lo, maxval=hi)
+    out_k = mt_ops.mrr_transfer(w, jax.random.PRNGKey(seed + 1),
+                                sigma_dac=0.0, sigma_th=0.0)
+    z = jnp.zeros_like(w)
+    out_r = mt_ref.mrr_transfer_ref(w, z, z, sigma_dac=0.0, sigma_th=0.0)
+    np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r),
+                               atol=5e-4)
+
+
+def _check_mrr_noisy_parity(n: int, seed: int, sigma_dac: float,
+                            sigma_th: float) -> None:
+    """Noisy parity: replicate ops.mrr_transfer's internal noise layout
+    (flatten -> pad to (rows, 128) -> split key -> two normals) so the
+    kernel and the oracle consume IDENTICAL draws."""
+    key = jax.random.PRNGKey(seed)
+    w = jax.random.uniform(jax.random.fold_in(key, 1), (n,),
+                           minval=-1.0, maxval=1.0)
+    out_k = mt_ops.mrr_transfer(w, key, sigma_dac=sigma_dac,
+                                sigma_th=sigma_th)
+    rows = -(-n // 128)
+    rows_pad = -(-rows // 8) * 8
+    flat = jnp.pad(w, (0, rows_pad * 128 - n)).reshape(rows_pad, 128)
+    k1, k2 = jax.random.split(key)
+    e_dac = jax.random.normal(k1, flat.shape, flat.dtype)
+    e_th = jax.random.normal(k2, flat.shape, flat.dtype)
+    out_r = mt_ref.mrr_transfer_ref(flat, e_dac, e_th,
+                                    sigma_dac=sigma_dac, sigma_th=sigma_th)
+    np.testing.assert_allclose(np.asarray(out_k),
+                               np.asarray(out_r.reshape(-1)[:n]),
+                               atol=5e-4)
+
+
+if hp is not None:
+    @hp.given(st.integers(1, 40), st.integers(1, 64), st.integers(1, 24),
+              st.sampled_from([4, 6, 8]), st.integers(0, 2 ** 16))
+    @hp.settings(max_examples=12, deadline=None)
+    def test_osa_parity_property(m, k, n, bits, seed):
+        _check_osa_parity(m, k, n, bits, seed)
+
+    @hp.given(st.integers(1, 40), st.integers(1, 64),
+              st.integers(0, 2 ** 16))
+    @hp.settings(max_examples=8, deadline=None)
+    def test_osa_parity_bf16_property(m, k, seed):
+        _check_osa_parity(m, k, 8, 8, seed, wdtype=jnp.bfloat16)
+
+    @hp.given(st.integers(1, 40), st.integers(1, 40),
+              st.integers(0, 2 ** 16),
+              st.floats(-1.0, 0.0), st.floats(0.0, 1.0))
+    @hp.settings(max_examples=10, deadline=None)
+    def test_mrr_ideal_parity_property(rows, cols, seed, lo, hi):
+        _check_mrr_ideal_parity(rows, cols, seed, lo, max(hi, lo + 1e-3))
+
+    @hp.given(st.integers(1, 700), st.integers(0, 2 ** 16),
+              st.floats(0.0, 0.05), st.floats(0.0, 0.1))
+    @hp.settings(max_examples=10, deadline=None)
+    def test_mrr_noisy_parity_property(n, seed, sigma_dac, sigma_th):
+        _check_mrr_noisy_parity(n, seed, sigma_dac, sigma_th)
+else:
+    @pytest.mark.parametrize("m,k,n,bits,seed", [
+        (1, 1, 1, 8, 0), (7, 9, 3, 4, 1), (8, 8, 8, 6, 2),
+        (9, 17, 8, 8, 3), (33, 64, 24, 8, 4), (40, 5, 1, 4, 5),
+        (16, 48, 9, 6, 6), (25, 31, 17, 8, 7)])
+    def test_osa_parity_property(m, k, n, bits, seed):
+        _check_osa_parity(m, k, n, bits, seed)
+
+    @pytest.mark.parametrize("m,k,seed", [(5, 12, 0), (17, 33, 1),
+                                          (40, 64, 2)])
+    def test_osa_parity_bf16_property(m, k, seed):
+        _check_osa_parity(m, k, 8, 8, seed, wdtype=jnp.bfloat16)
+
+    @pytest.mark.parametrize("rows,cols,seed,lo,hi", [
+        (1, 1, 0, -1.0, 1.0), (3, 7, 1, -0.5, 0.5), (16, 8, 2, -1.0, 0.0),
+        (33, 7, 3, 0.0, 1.0), (40, 40, 4, -0.9, 0.9)])
+    def test_mrr_ideal_parity_property(rows, cols, seed, lo, hi):
+        _check_mrr_ideal_parity(rows, cols, seed, lo, hi)
+
+    @pytest.mark.parametrize("n,seed,sd,sth", [
+        (1, 0, 0.02, 0.04), (127, 1, 0.0, 0.1), (128, 2, 0.05, 0.0),
+        (129, 3, 0.02, 0.04), (700, 4, 0.01, 0.02)])
+    def test_mrr_noisy_parity_property(n, seed, sd, sth):
+        _check_mrr_noisy_parity(n, seed, sd, sth)
 
 
 # ---------------------------------------------------------------------------

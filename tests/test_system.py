@@ -77,10 +77,24 @@ def test_serve_cli_generates(tmp_path):
     env = dict(os.environ, PYTHONPATH=SRC)
     r = subprocess.run(
         [sys.executable, "-m", "repro.launch.serve", "--arch", "mamba2-1.3b",
-         "--smoke", "--batch", "2", "--prompt-len", "16", "--gen", "4"],
+         "--smoke", "--policy", "batch", "--batch", "2",
+         "--prompt-len", "16", "--gen", "4"],
         capture_output=True, text=True, env=env, timeout=600)
     assert r.returncode == 0, r.stderr[-2000:]
     assert "decoded 4 tokens" in r.stdout
+
+
+def test_serve_cli_continuous_stream(tmp_path):
+    """The continuous-batching CLI end-to-end on a small Poisson stream."""
+    env = dict(os.environ, PYTHONPATH=SRC)
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.serve", "--arch", "qwen3-32b",
+         "--smoke", "--requests", "6", "--n-slots", "2", "--max-len", "32",
+         "--gen-range", "2", "12", "--temperature", "0.5"],
+        capture_output=True, text=True, env=env, timeout=600)
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "tokens_per_unit" in r.stdout
+    assert "total_tokens" in r.stdout
 
 
 def test_grad_compression_error_feedback(key):
