@@ -204,6 +204,57 @@ def bench_robust_smoke(quick: bool) -> list[Metric]:
             + [dc.replace(m, name=f"sens_{m.name}") for m in m_sen])
 
 
+def bench_compile_cache(quick: bool) -> list[Metric]:
+    """rosa.compile cold vs warm: a cold compile must run the plan search
+    and a warm compile must load the identical plan from the disk cache
+    without searching.  The cache-behaviour bits and the autotuned-plan
+    shape are deterministic and gated; wall times are recorded ungated."""
+    import tempfile
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro import rosa
+    from repro.core.constants import Mapping
+    from repro.models.cnn import LITE_MODELS, LITE_SKIPS, cnn_apply, cnn_def
+    from repro.models.module import abstract_params
+    from repro.training.cnn_train import QAT_CFG
+
+    specs = LITE_MODELS["alexnet"]
+    skips = LITE_SKIPS.get("alexnet")
+    engine = rosa.Engine.from_config(QAT_CFG)
+
+    def apply_fn(eng, params, x):
+        return cnn_apply(params, specs, x, eng, residual_from=skips)
+
+    skel = abstract_params(cnn_def(specs), dtype=jnp.float32)
+    x = jax.ShapeDtypeStruct((8, 32, 32, 3), jnp.float32)
+    tune = rosa.AutotuneConfig(batch=8)
+    with tempfile.TemporaryDirectory() as cache_dir:
+        t0 = time.time()
+        cold = rosa.compile(apply_fn, engine, (skel, x), autotune=tune,
+                            cache=cache_dir)
+        t_cold = time.time() - t0
+        t0 = time.time()
+        warm = rosa.compile(apply_fn, engine, (skel, x), autotune=tune,
+                            cache=cache_dir)
+        t_warm = time.time() - t0
+    n_is = sum(1 for m in cold.plan.mapping_plan().values()
+               if m is Mapping.IS)
+    return [
+        Metric("cold_searched", int(cold.searched), gate=True, rel_tol=0.0),
+        Metric("warm_cache_hit", int(warm.cache_hit), gate=True,
+               rel_tol=0.0),
+        Metric("warm_searched", int(warm.searched), gate=True, rel_tol=0.0),
+        Metric("plans_equal", int(cold.plan == warm.plan), gate=True,
+               rel_tol=0.0),
+        Metric("n_trace_layers", len(cold.trace), gate=True, rel_tol=0.0),
+        Metric("n_is_layers", n_is, gate=True, rel_tol=0.0),
+        Metric("cold_compile_s", t_cold, unit="s"),
+        Metric("warm_compile_s", t_warm, unit="s"),
+    ]
+
+
 def bench_serve_smoke(quick: bool) -> list[Metric]:
     """repro.serve end-to-end: a seeded Poisson request stream through the
     continuous-batching scheduler vs the static one-shot baseline on the
@@ -238,6 +289,7 @@ BENCHES: dict[str, callable] = {
     "ledger_trace": bench_ledger_trace,
     "table4_hybrid": bench_table4_hybrid,
     "robust_smoke": bench_robust_smoke,
+    "compile_cache": bench_compile_cache,
     "serve_smoke": bench_serve_smoke,
     "roofline": bench_roofline,
 }

@@ -33,7 +33,7 @@ from repro.core import mrr
 from repro.core.constants import (ComputeMode, DEAP_HIGH_CHANNEL, Mapping,
                                   ROSA_OPTIMAL)
 from repro.models.cnn import LITE_MODELS
-from repro.training.cnn_train import (QAT_CFG, evaluate_cnn,
+from repro.training.cnn_train import (QAT_CFG, cnn_program, evaluate_cnn,
                                       layer_noise_profile, train_cnn)
 
 
@@ -43,16 +43,18 @@ def _layer_names(model):
 
 def _acc_with(params, model, mode, mp, noise, n_mc=3, seed=17):
     cfg = dataclasses.replace(QAT_CFG, mode=mode, mapping=mp, noise=noise)
-    engine = rosa.Engine.from_config(cfg, layers=_layer_names(model))
-    return evaluate_cnn(params, model, engine,
+    program = cnn_program(
+        model, rosa.Engine.from_config(cfg, layers=_layer_names(model)))
+    return evaluate_cnn(params, model, program=program,
                         key=jax.random.PRNGKey(seed), n_mc=n_mc)
 
 
 def _acc_with_plan(params, model, plan, noise, n_mc=3, seed=17):
     cfg = dataclasses.replace(QAT_CFG, noise=noise)   # default: WS
-    engine = rosa.Engine.from_hybrid_plan(cfg, plan,
-                                          layers=_layer_names(model))
-    return evaluate_cnn(params, model, engine,
+    program = cnn_program(
+        model, rosa.Engine.from_hybrid_plan(cfg, plan,
+                                            layers=_layer_names(model)))
+    return evaluate_cnn(params, model, program=program,
                         key=jax.random.PRNGKey(seed), n_mc=n_mc)
 
 

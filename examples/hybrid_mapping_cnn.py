@@ -4,9 +4,11 @@ QAT-train AlexNet-lite on synth-CIFAR -> profile per-layer IS/WS noise
 sensitivity (Fig. 6) -> join with the full-size EDP table -> balanced-
 metric plan (Sec. 3.5) -> evaluate accuracy + EDP vs WS/IS/analog.
 
-The resulting plan is then lifted into an executable `rosa.Engine` and the
-lite model is re-traced with an `EnergyLedger` attached, so the printed
-behavioural-trace EDP comes from the very matmuls the plan routed.
+The resulting plan is then lifted into a compiled `rosa.Program`
+(`rosa.compile` freezes the plan and re-prices the captured named-GEMM
+trace onto the attached `EnergyLedger`), so the printed behavioural-trace
+EDP comes from the very matmuls the plan routed — and the program's
+`lower()` artifact shows the JSON plan the on-disk cache would persist.
 
 Run:  PYTHONPATH=src python examples/hybrid_mapping_cnn.py [--steps 250]
 """
@@ -35,25 +37,25 @@ if __name__ == "__main__":
     res = run_model(args.model, steps=args.steps, n_mc=2)
     plan = {k: Mapping(v) for k, v in res["plan"].items()}
 
-    # lift the plan into the execution API and re-trace the lite model
+    # lift the plan into a compile-once Program: the compile captures the
+    # named-GEMM trace and prices it onto the attached ledger
+    from repro.training.cnn_train import cnn_program
     specs = LITE_MODELS[args.model]
-    ledger = rosa.EnergyLedger()
     engine = rosa.Engine.from_hybrid_plan(
         dataclasses.replace(QAT_CFG, noise=mrr.PAPER_NOISE), plan,
         layers=[s.name for s in specs],
-        key=jax.random.PRNGKey(0), ledger=ledger)
+        key=jax.random.PRNGKey(0), ledger=rosa.EnergyLedger())
+    program = cnn_program(args.model, engine)
 
-    print("\nper-layer plan (resolved through the Engine):")
+    print("\nper-layer plan (resolved through the Program):")
     for s in specs:
-        print(f"  {s.name:10s} -> {engine.config(s.name).mapping.value}")
+        print(f"  {s.name:10s} -> {program.plan.resolve(s.name).mapping.value}")
 
-    from repro.models.cnn import LITE_SKIPS, cnn_apply, cnn_def
-    from repro.models.module import abstract_params
-    import jax.numpy as jnp
-    skel = abstract_params(cnn_def(specs), dtype=jnp.float32)
-    jax.eval_shape(lambda p, x: cnn_apply(p, specs, x, engine,
-                                          residual_from=LITE_SKIPS.get(
-                                              args.model)),
-                   skel, jax.ShapeDtypeStruct((8, 32, 32, 3), jnp.float32))
+    ledger = program.ledger
     print(f"\nlite-model behavioural-trace EDP (batch 8, (8,8) array): "
-          f"{ledger.edp(ROSA_OPTIMAL):.4g} J*s over {len(ledger)} matmuls")
+          f"{ledger.edp(ROSA_OPTIMAL):.4g} J*s over "
+          f"{len(program.trace)} traced GEMMs")
+    art = program.lower()
+    print(f"lowered artifact: {len(art['plan']['overrides'])} plan "
+          f"overrides, trace fingerprint "
+          f"{program.trace.fingerprint[:12]}...")

@@ -4,8 +4,11 @@
   2. an OSA bit-serial optical matmul == its exact digital reference,
   3. the rosa.Engine: hybrid WS/IS execution plan, per-layer keys, and
      trace-based energy accounting from the same routed matmuls,
-  4. the energy model: one conv layer with and without OSA,
-  5. the array-size DSE winner.
+  4. rosa.compile: the compile-once Program — trace the workload, autotune
+     the hybrid plan against it, cache the searched plan on disk (the
+     second compile is a warm cache hit that skips the search),
+  5. the energy model: one conv layer with and without OSA,
+  6. the array-size DSE winner.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
@@ -57,7 +60,30 @@ print(f"traced EDP of those two matmuls on the (8,8) array: "
       f"{ledger.edp(ROSA_OPTIMAL):.3e} J*s "
       f"({len(ledger)} events, plan={traced_plan})")
 
-# 4. energy: OSA cuts the ADC events per output from 7 to 1
+# 4. compile-once Program: one abstract trace captures the whole workload,
+#    the layer-wise hybrid plan is autotuned on it, and the searched plan
+#    persists in a content-addressed disk cache
+import tempfile
+
+w2 = jax.random.normal(jax.random.PRNGKey(2), (8, 16))
+
+def toy_net(eng, x, w, w2):
+    h = eng.matmul(x, w, name="proj_in")
+    return eng.matmul(h, w2, name="proj_out")
+
+with tempfile.TemporaryDirectory() as cache_dir:
+    base = rosa.Engine.from_config(rosa.RosaConfig(noise=mrr.PAPER_NOISE))
+    tune = dict(autotune=rosa.AutotuneConfig(batch=4), cache=cache_dir)
+    cold = rosa.compile(toy_net, base, (x, w, w2), **tune)
+    warm = rosa.compile(toy_net, base, (x, w, w2), **tune)
+    y = cold(x, w, w2, key=key)
+    print(f"\ncompile: cold searched={cold.searched}, "
+          f"warm cache_hit={warm.cache_hit} (plans equal: "
+          f"{cold.plan == warm.plan})")
+    print("autotuned plan:",
+          {k: v.value for k, v in cold.plan.mapping_plan().items()})
+
+# 5. energy: OSA cuts the ADC events per output from 7 to 1
 layer = energy.LayerShape("conv3", m=64, k=1728, n=384)
 no = energy.layer_energy(layer, ROSA_OPTIMAL, osa=energy.NO_OSA, batch=128)
 ya = energy.layer_energy(layer, ROSA_OPTIMAL, osa=energy.OSA_OPTIMAL,
@@ -65,7 +91,7 @@ ya = energy.layer_energy(layer, ROSA_OPTIMAL, osa=energy.OSA_OPTIMAL,
 print(f"\nconv3 EDP: no-OSA {no.edp:.3e}  with-OSA {ya.edp:.3e} "
       f"({(1 - ya.edp / no.edp) * 100:.0f}% lower)")
 
-# 5. the DSE winner across all six workloads
+# 6. the DSE winner across all six workloads
 wls = [dse.Workload(n, ls) for n, ls in WORKLOADS.items()]
 best = dse.best(wls, batch=128)
 print(f"DSE winner: {best.label} (paper: R=8,C=8)")

@@ -4,10 +4,12 @@
   mrr         noise-aware voltage->weight chain (Eqs. 3-8) + inverse
   quant       8-bit quantization, signed-digit / PAM plane decomposition
   osa         optical shift-and-add semantics (Eqs. 1-2) + non-idealities
-  onn_linear  compat shim: rosa_matmul/RosaConfig now live in repro.rosa
   energy      event-count energy/latency/EDP model (Sec. 3.4)
   mapping     layer-wise hybrid IS/WS mapping (Sec. 3.5)
   dse         OPE array design-space exploration (Fig. 7)
+
+The optical MAC itself (rosa_matmul/RosaConfig) and all per-layer routing
+live in `repro.rosa` — compile models with `rosa.compile`.
 """
 
-from repro.core import constants, dse, energy, mapping, mrr, onn_linear, osa, quant  # noqa: F401
+from repro.core import constants, dse, energy, mapping, mrr, osa, quant  # noqa: F401

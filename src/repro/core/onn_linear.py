@@ -1,28 +1,6 @@
-"""Compatibility shim — the optical MAC now lives in `repro.rosa`.
+"""Removed module (kept only as a pointer for stale imports)."""
 
-`rosa_matmul` (the paper's MAC engine as a drop-in JAX matmul with
-straight-through gradients) and `RosaConfig` moved to
-`repro.rosa.backends`, where the contraction backend (dense einsum /
-pure-jnp OSA reference / Pallas kernel) is a registry entry selected by
-`RosaConfig.backend` instead of the old `use_kernel` boolean.  Per-layer
-routing, PRNG key folding, and trace-based energy accounting live on
-`repro.rosa.Engine`.
-
-This module re-exports the names so existing `repro.core.onn_linear`
-imports keep working; new code should import from `repro.rosa`.
-"""
-
-from __future__ import annotations
-
-__all__ = ["DEFAULT", "RosaConfig", "make_backend", "rosa_matmul"]
-
-
-def __getattr__(name: str):
-    # PEP 562 lazy re-export: repro.core.__init__ imports this module while
-    # repro.rosa may still be mid-initialization (rosa.backends itself
-    # imports repro.core submodules), so the indirection must not resolve
-    # at import time.
-    if name in __all__:
-        from repro.rosa import backends
-        return getattr(backends, name)
-    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+raise ImportError(
+    "repro.core.onn_linear was removed: rosa_matmul/RosaConfig live in "
+    "repro.rosa, and per-layer routing is the compile-once Program API — "
+    "see the rosa.compile migration table in src/repro/rosa/__init__.py")

@@ -28,7 +28,7 @@ import jax
 import jax.numpy as jnp
 
 from repro import rosa
-from repro.models.module import MatmulBackend, ParamDef, DENSE
+from repro.models.module import ParamDef
 
 NEG_INF = -2.0e38
 
@@ -213,8 +213,7 @@ def attn_apply(p: dict, cfg: AttnConfig, x: jax.Array,
                positions: jax.Array, *,
                window=0, theta=None,
                memory: jax.Array | None = None,
-               memory_pos: jax.Array | None = None,
-               backend: MatmulBackend = DENSE) -> jax.Array:
+               memory_pos: jax.Array | None = None) -> jax.Array:
     """Full-sequence attention. x: (B, S, D)."""
     theta = cfg.rope_theta if theta is None else theta
     q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])

@@ -10,24 +10,20 @@ No flax — params are plain pytrees.  A model first builds a *skeleton*
 Logical axis names are resolved to mesh axes by distributed/sharding.py
 (MaxText-style rules table), so model code never mentions mesh axes.
 
-The matmul *backend* is how the paper's technique enters the model zoo:
-every linear layer routes through `MatmulBackend.apply`, now a thin shim
-over `repro.rosa.Engine` — a plain einsum (`dense`) or the full ROSA
-optical pipeline (`rosa`, with a per-layer WS/IS mapping plan resolved
-through an `ExecutionPlan`).  New code should hold an Engine directly.
+The paper's technique enters the model zoo through `repro.rosa`: linear
+layers route their contractions through a `rosa.Engine` (or, compile-once,
+a `rosa.Program` built by `rosa.compile`).  The old `MatmulBackend` shim
+was removed after its last importers migrated.
 """
 
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-
-from repro import rosa
 
 # ---------------------------------------------------------------------------
 # Param skeletons
@@ -79,41 +75,13 @@ def param_count(skel) -> int:
                for d in jax.tree.leaves(skel, is_leaf=_is_def))
 
 
-# ---------------------------------------------------------------------------
-# Matmul backend — where ROSA plugs in
-# ---------------------------------------------------------------------------
-
-
-@dataclasses.dataclass(frozen=True)
-class MatmulBackend:
-    """Routes every linear layer's contraction (shim over `rosa.Engine`).
-
-    kind='dense': jnp.einsum in bf16/f32 — the production default when the
-      optical accelerator is not attached (and the dry-run/roofline path).
-    kind='rosa' : the ROSA optical pipeline with this layer's RosaConfig —
-      8-bit signed-digit OSA MAC with WS/IS noise placement, mapping
-      resolved per layer name through the engine's ExecutionPlan.
-    """
-
-    kind: str = "dense"
-    rosa_cfg: Any = None          # rosa.RosaConfig when kind='rosa'
-    plan: Any = None              # optional {layer_name: Mapping} hybrid plan
-
-    @functools.cached_property
-    def engine(self) -> rosa.Engine:
-        if self.kind == "dense":
-            return rosa.Engine.dense()
-        if self.kind == "rosa":
-            cfg = self.rosa_cfg if self.rosa_cfg is not None else rosa.DEFAULT
-            return rosa.Engine.from_hybrid_plan(cfg, dict(self.plan or {}))
-        raise ValueError(self.kind)
-
-    def apply(self, x: jax.Array, w: jax.Array, *, name: str = "",
-              key: jax.Array | None = None) -> jax.Array:
-        return self.engine.matmul(x, w, name=name, key=key)
-
-
-DENSE = MatmulBackend(kind="dense")
+def __getattr__(name: str):
+    if name in ("MatmulBackend", "DENSE"):
+        raise ImportError(
+            f"repro.models.module.{name} was removed: use rosa.Engine / "
+            "rosa.compile — see the migration table in "
+            "src/repro/rosa/__init__.py")
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
 # ---------------------------------------------------------------------------

@@ -136,9 +136,10 @@ def _ffn_apply(p: dict, cfg: ModelConfig, x: jax.Array,
         if cfg.rosa_mlp:
             # step = (traced) layer index: layers in a scanned stack
             # must fold independent noise keys (see mlp_apply).  An
-            # installed engine context (rosa.use_engine) wins: serving pins
-            # a fabricated chip + hybrid plan + ledger there.
-            engine = rosa.current_engine()
+            # installed engine context (rosa.engine_context — a compiled
+            # rosa.Program installs its own) wins: serving pins a
+            # fabricated chip + hybrid plan + ledger there.
+            engine = rosa.ambient_engine()
             if engine is None:
                 engine = rosa.Engine.from_config()
             return L.mlp_apply(p, x, engine=engine, step=step)

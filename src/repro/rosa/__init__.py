@@ -1,19 +1,29 @@
 """rosa — the unified execution-plan API over the optical backend.
 
 Everything the paper's pipeline needs to execute a network optically enters
-through two objects:
+through three objects:
 
   `ExecutionPlan`   frozen, hashable (static-pytree) resolution from layer
                     name to `RosaConfig` — a default config plus per-layer
                     overrides.  The layer-wise hybrid IS/WS mapping
                     (Sec. 3.5) is an override set built by
-                    `ExecutionPlan.from_mapping_plan`.
+                    `ExecutionPlan.from_mapping_plan`; `to_json`/`from_json`
+                    round-trip it losslessly.
 
   `Engine`          routes every named matmul: resolves the layer's config
                     from the plan, folds a deterministic per-layer/per-step
                     PRNG key from its base key (`layer_key`), records the
                     GEMM shape on an optional `EnergyLedger`, and dispatches
                     to the registered contraction backend.
+
+  `Program`         the compile-once handle (`rosa.compile`): abstractly
+                    traces a model once into a `ProgramTrace`, autotunes
+                    the hybrid plan against that whole workload
+                    (`AutotuneConfig`; searched plans persist in the
+                    content-addressed on-disk `PlanCache`, so warm compiles
+                    skip the search), and freezes the result into a jitted
+                    executable with explicit key/ledger/variation threading
+                    — no global engine stack.
 
 Backends (`rosa.backends`) are registered by name — `dense` exact einsum,
 `ref` pure-jnp OSA (Eq. 1 oracle), `pallas` TPU kernel — and selected by
@@ -26,26 +36,37 @@ event-count model (core.energy), so `ledger.edp(...)` is computed from the
 same matmuls that produced the numerics — by construction it agrees with
 `core.mapping.plan_edp` on the equivalent LayerShape list.
 
-Migration from the pre-Engine API:
+Migration to the Program API (the ambient-engine context managers are
+deprecated; `rosa.compile` installs the engine around its own traces):
 
-    MatmulBackend(kind="rosa", rosa_cfg=cfg, plan=plan).apply(x, w, name=n)
-      -> Engine.from_hybrid_plan(cfg, plan).matmul(x, w, name=n)
-    RosaConfig(use_kernel=True)  ->  RosaConfig(backend="pallas")
-    {layer: RosaConfig} dicts    ->  Engine.from_layer_cfgs(cfgs)
-    hand-threaded `key=` args    ->  Engine(..., key=base_key) + name folding
+    with use_engine(engine): y = jit(f)(x)
+        -> program = rosa.compile(lambda eng, x: f(x), engine, (x,))
+           y = program(x)                          # or program.bind(f)(x)
+    current_engine()              -> ambient_engine()   (model code only)
+    use_engine(engine)            -> engine_context(engine)  (low-level)
+    per-call hybrid plan search   -> rosa.compile(..., autotune=
+                                       rosa.AutotuneConfig(...))  [cached]
+    hand-threaded `key=` args     -> program(*args, key=base_key)
+    MatmulBackend(...).apply(...) -> removed; Engine.matmul / rosa.compile
+    RosaConfig(use_kernel=True)   -> RosaConfig(backend="pallas")
 """
 
 from repro.rosa.backends import (DEFAULT, RosaConfig, backend_names,
                                  make_backend, register_backend,
                                  resolve_backend, rosa_matmul)
-from repro.rosa.engine import (Engine, current_engine, layer_key,
-                               use_engine)
+from repro.rosa.engine import (Engine, ambient_engine, current_engine,
+                               engine_context, layer_key, use_engine)
 from repro.rosa.ledger import EnergyLedger, MatmulEvent
 from repro.rosa.plan import ExecutionPlan
+from repro.rosa.program import (EDP_ONLY, AutotuneConfig, PlanCache,
+                                Program, ProgramTrace, TraceEntry,
+                                capture_trace, compile, default_cache_dir)
 
 __all__ = [
-    "DEFAULT", "Engine", "EnergyLedger", "ExecutionPlan", "MatmulEvent",
-    "RosaConfig", "backend_names", "current_engine", "layer_key",
-    "make_backend", "register_backend", "resolve_backend", "rosa_matmul",
-    "use_engine",
+    "DEFAULT", "EDP_ONLY", "AutotuneConfig", "Engine", "EnergyLedger",
+    "ExecutionPlan", "MatmulEvent", "PlanCache", "Program", "ProgramTrace",
+    "RosaConfig", "TraceEntry", "ambient_engine", "backend_names",
+    "capture_trace", "compile", "current_engine", "default_cache_dir",
+    "engine_context", "layer_key", "make_backend", "register_backend",
+    "resolve_backend", "rosa_matmul", "use_engine",
 ]

@@ -24,7 +24,9 @@ Usage:
 from __future__ import annotations
 
 import contextlib
+import contextvars
 import dataclasses
+import warnings
 import zlib
 from typing import Iterable, Mapping as TMapping
 
@@ -40,11 +42,16 @@ from repro.rosa.ledger import EnergyLedger
 from repro.rosa.plan import ExecutionPlan
 
 
-_ENGINE_STACK: list["Engine"] = []
+# Context-LOCAL ambient engine: a ContextVar, not a module-global stack, so
+# concurrent serving threads (and asyncio tasks) each see only the engine
+# they installed — installing an engine in one request handler can never
+# leak into another thread's trace.
+_ENGINE_VAR: contextvars.ContextVar["Engine | None"] = \
+    contextvars.ContextVar("rosa_ambient_engine", default=None)
 
 
-def current_engine() -> "Engine | None":
-    """The innermost engine installed by `use_engine`, or None.
+def ambient_engine() -> "Engine | None":
+    """The innermost engine installed by `engine_context`, or None.
 
     Model code that routes matmuls optically but takes no engine parameter
     (e.g. a scanned transformer stack with `rosa_mlp=True`) resolves its
@@ -52,18 +59,41 @@ def current_engine() -> "Engine | None":
     chip (`Engine.with_variation`), a hybrid mapping plan and an
     `EnergyLedger` without threading the engine through every model
     signature.  Keep the context active around the `jax.jit` call: it is
-    consulted while tracing, not at run time."""
-    return _ENGINE_STACK[-1] if _ENGINE_STACK else None
+    consulted while tracing, not at run time.  Prefer `rosa.compile` — a
+    `Program` installs its engine around its own traces, so callers never
+    manage this context by hand."""
+    return _ENGINE_VAR.get()
 
 
 @contextlib.contextmanager
-def use_engine(engine: "Engine"):
-    """Install `engine` as the ambient optical engine for model code."""
-    _ENGINE_STACK.append(engine)
+def engine_context(engine: "Engine | None"):
+    """Install `engine` as the ambient optical engine for model code.
+
+    Context-local (thread- and task-safe): nested installs restore the
+    previous engine on exit, and other threads are unaffected."""
+    token = _ENGINE_VAR.set(engine)
     try:
         yield engine
     finally:
-        _ENGINE_STACK.pop()
+        _ENGINE_VAR.reset(token)
+
+
+def current_engine() -> "Engine | None":
+    """Deprecated alias of `ambient_engine` (pre-Program API)."""
+    warnings.warn(
+        "rosa.current_engine is deprecated; use rosa.ambient_engine(), or "
+        "better, rosa.compile(...) which threads the engine for you",
+        DeprecationWarning, stacklevel=2)
+    return ambient_engine()
+
+
+def use_engine(engine: "Engine"):
+    """Deprecated alias of `engine_context` (pre-Program API)."""
+    warnings.warn(
+        "rosa.use_engine is deprecated; use rosa.engine_context(engine), or "
+        "better, rosa.compile(...) which installs the engine around its own "
+        "traces", DeprecationWarning, stacklevel=2)
+    return engine_context(engine)
 
 
 def layer_key(base: jax.Array, name: str, step: int | jax.Array = 0

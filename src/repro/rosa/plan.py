@@ -89,6 +89,26 @@ class ExecutionPlan:
         return self.default is None and all(c is None
                                             for _, c in self.overrides)
 
+    # -- JSON round-trip -----------------------------------------------------
+    def to_json(self) -> dict:
+        """JSON-native view; `ExecutionPlan.from_json` inverts it exactly.
+        This is what the on-disk plan cache persists."""
+        from repro.rosa.serialize import config_to_json
+        return {
+            "default": config_to_json(self.default),
+            "overrides": [[n, config_to_json(c)] for n, c in self.overrides],
+            "layers": list(self.layers) if self.layers is not None else None,
+        }
+
+    @classmethod
+    def from_json(cls, doc: dict) -> "ExecutionPlan":
+        from repro.rosa.serialize import config_from_json
+        return cls(
+            config_from_json(doc["default"]),
+            tuple((n, config_from_json(c)) for n, c in doc["overrides"]),
+            tuple(doc["layers"]) if doc["layers"] is not None else None,
+        )
+
     def mapping_plan(self) -> dict[str, Mapping]:
         """Project back to a `{layer: Mapping}` dict (optical layers only)."""
         return {n: c.mapping for n, c in self.overrides if c is not None}

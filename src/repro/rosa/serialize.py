@@ -1,0 +1,88 @@
+"""JSON (de)serialization for the plan/program layer.
+
+Everything `rosa.compile` persists — `RosaConfig`, `ExecutionPlan`,
+`ProgramTrace`, autotune settings — round-trips through plain JSON dicts so
+searched plans can live in the content-addressed on-disk plan cache and be
+inspected / diffed offline.  Serialization is canonical (sorted keys, no
+whitespace variance) because the cache key is a hash of these documents.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+import hashlib
+import json
+from typing import Any
+
+from repro.core import energy as E
+from repro.core import mrr, osa
+from repro.core.constants import ComputeMode, Mapping, OPEConfig
+from repro.rosa.backends import RosaConfig
+
+
+def to_jsonable(obj: Any) -> Any:
+    """Recursively lower dataclasses/enums/tuples to JSON-native values."""
+    if obj is None or isinstance(obj, (bool, int, float, str)):
+        return obj
+    if isinstance(obj, enum.Enum):
+        return obj.value
+    if dataclasses.is_dataclass(obj) and not isinstance(obj, type):
+        return {f.name: to_jsonable(getattr(obj, f.name))
+                for f in dataclasses.fields(obj)}
+    if isinstance(obj, (list, tuple)):
+        return [to_jsonable(v) for v in obj]
+    if isinstance(obj, dict):
+        return {str(k): to_jsonable(v) for k, v in obj.items()}
+    raise TypeError(f"cannot serialize {type(obj).__name__} to JSON")
+
+
+def canonical_json(doc: Any) -> str:
+    """Deterministic JSON text (sorted keys, minimal separators)."""
+    return json.dumps(to_jsonable(doc), sort_keys=True,
+                      separators=(",", ":"))
+
+
+def content_hash(*docs: Any) -> str:
+    """sha256 over the canonical JSON of `docs` — the cache-key primitive."""
+    h = hashlib.sha256()
+    for doc in docs:
+        h.update(canonical_json(doc).encode("utf-8"))
+        h.update(b"\x00")
+    return h.hexdigest()
+
+
+# ---------------------------------------------------------------------------
+# RosaConfig
+# ---------------------------------------------------------------------------
+def config_to_json(cfg: RosaConfig | None) -> dict | None:
+    return None if cfg is None else to_jsonable(cfg)
+
+
+def config_from_json(doc: dict | None) -> RosaConfig | None:
+    if doc is None:
+        return None
+    return RosaConfig(
+        mapping=Mapping(doc["mapping"]),
+        mode=ComputeMode(doc["mode"]),
+        quant_bits=int(doc["quant_bits"]),
+        pam_bits=int(doc["pam_bits"]),
+        noise=mrr.NoiseModel(**doc["noise"]),
+        osa_cfg=osa.OSAConfig(**doc["osa_cfg"]),
+        mrr_params=mrr.MRRParams(**doc["mrr_params"]),
+        backend=doc["backend"],
+        act_per_vector=bool(doc["act_per_vector"]),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Energy-model configs (autotune settings)
+# ---------------------------------------------------------------------------
+def ope_from_json(doc: dict) -> OPEConfig:
+    return OPEConfig(rows=int(doc["rows"]), cols=int(doc["cols"]),
+                     tiles=int(doc["tiles"]))
+
+
+def osa_energy_from_json(doc: dict) -> E.OSAEnergyConfig:
+    return E.OSAEnergyConfig(enabled=bool(doc["enabled"]),
+                             ode_len=int(doc["ode_len"]))

@@ -32,10 +32,10 @@ class ServeConfig:
     evict_on_done  zero a slot's cache rows when its request completes
                    (admission overwrites anyway; this guarantees freed
                    state never outlives its request)
-    rosa           route MLP projections through the optical engine
-                   (`rosa.use_engine` context installed around the jitted
-                   steps), with a layer-wise hybrid mapping plan searched
-                   on the decode trace and an optional pinned chip
+    rosa           route MLP projections through the optical engine: the
+                   decode step is compiled into one `rosa.Program` (plan
+                   autotuned on the decode trace, disk plan cache) and
+                   every jitted step is built from it; optional pinned chip
     rosa_backend   contraction backend name for the optical path
     variation_seed pin ONE sampled fabricated chip (repro.robust
                    StaticVariation) for every decode; None = ideal device

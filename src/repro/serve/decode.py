@@ -155,22 +155,31 @@ def _step_body(bundle: ModelBundle, scfg: ServeConfig, params,
     return new_state, out
 
 
-def make_admit_step(bundle: ModelBundle, scfg: ServeConfig):
+def _jitter(program):
+    """The jit entry for the serving steps: `jax.jit` when no optical
+    program is attached, else `program.bind` — which installs the
+    program's frozen engine (tuned plan, pinned chip, ledger) as the
+    ambient context while the step traces, so the scheduler builds every
+    step from ONE `rosa.Program` instead of a global engine stack."""
+    return jax.jit if program is None else program.bind
+
+
+def make_admit_step(bundle: ModelBundle, scfg: ServeConfig, program=None):
     """-> admit(state, admit_payload) -> state (jitted, state donated).
 
     Admission WITHOUT a decode step — the static-batching baseline forms
     its batch with this, then decodes; the continuous policy never needs
     it (its admissions ride inside `make_serve_step`)."""
 
-    @functools.partial(jax.jit, donate_argnums=(0,))
     def admit(state: DecodeState, payload: dict) -> DecodeState:
         return _apply_admission(bundle.cfg, state, payload,
                                 jnp.zeros((), jnp.int32))
 
-    return admit
+    return _jitter(program)(admit, donate_argnums=(0,))
 
 
-def make_serve_step(bundle: ModelBundle, scfg: ServeConfig, mesh=None):
+def make_serve_step(bundle: ModelBundle, scfg: ServeConfig, mesh=None,
+                    program=None):
     """-> step(params, state, admit, temperature) -> (state, out), jitted
     with the state donated.  With `mesh` (carrying a "data" axis that
     divides n_slots) the step runs under a slot-sharded shard_map: each
@@ -180,12 +189,11 @@ def make_serve_step(bundle: ModelBundle, scfg: ServeConfig, mesh=None):
     if mesh is None:
         body = functools.partial(_step_body, bundle, scfg)
 
-        @functools.partial(jax.jit, donate_argnums=(1,))
         def step(params, state, admit, temperature):
             return body(params, state, admit, temperature,
                         jnp.zeros((), jnp.int32))
 
-        return step
+        return _jitter(program)(step, donate_argnums=(1,))
 
     from repro.distributed.sharding import shard_map_compat, slot_dim_specs
     from jax.sharding import PartitionSpec as P
@@ -220,22 +228,21 @@ def make_serve_step(bundle: ModelBundle, scfg: ServeConfig, mesh=None):
         local, mesh=mesh,
         in_specs=(P(), state_specs, admit_specs, P()),
         out_specs=(state_specs, out_specs))
-    return functools.partial(jax.jit, donate_argnums=(1,))(sharded)
+    return _jitter(program)(sharded, donate_argnums=(1,))
 
 
-def make_evict(bundle: ModelBundle, scfg: ServeConfig):
+def make_evict(bundle: ModelBundle, scfg: ServeConfig, program=None):
     """-> evict(state, slot) -> state with that slot's cache zeroed (jitted,
     donated).  Admission overwrites slots anyway; eviction guarantees a
     completed request's KV rows don't outlive it (scfg.evict_on_done)."""
 
-    @functools.partial(jax.jit, donate_argnums=(0,))
     def evict(state: DecodeState, slot):
         return state._replace(
             cache=evict_slot(bundle.cfg, state.cache, slot),
             active=_row_write(state.active, jnp.zeros((1,), bool), slot,
                               True))
 
-    return evict
+    return _jitter(program)(evict, donate_argnums=(0,))
 
 
 # ---------------------------------------------------------------------------
@@ -309,9 +316,10 @@ class PrefillTask:
         return self.done
 
 
-def make_chunk_fn(bundle: ModelBundle):
+def make_chunk_fn(bundle: ModelBundle, program=None):
     """The shared jitted chunk step; ONLY the request cache is donated
     (tokens/n_valid are rebuilt per chunk and too small to matter)."""
-    return functools.partial(jax.jit, donate_argnums=(3,))(
+    return _jitter(program)(
         lambda params, tokens, n_valid, cache: bundle.chunk_step(
-            params, {"tokens": tokens, "n_valid": n_valid, "cache": cache}))
+            params, {"tokens": tokens, "n_valid": n_valid, "cache": cache}),
+        donate_argnums=(3,))

@@ -53,7 +53,7 @@ def trace_serving_shapes(bundle, scfg: ServeConfig, engine):
     from repro import rosa
     ledger = engine.ledger
     params = bundle.abstract(jnp.float32)
-    with rosa.use_engine(engine):
+    with rosa.engine_context(engine):
         with ledger.scope("decode"):
             jax.eval_shape(bundle.decode_step, params,
                            _abstract_decode_batch(bundle.cfg, scfg))
@@ -64,31 +64,46 @@ def trace_serving_shapes(bundle, scfg: ServeConfig, engine):
     return ledger
 
 
-def build_serving_engine(bundle, scfg: ServeConfig, with_ledger: bool = True):
-    """Engine for serving: hybrid plan searched on the decode trace,
-    optional pinned chip, fresh `EnergyLedger` attached."""
+def build_serving_program(bundle, scfg: ServeConfig, cache=None):
+    """Compile the decode step into a `rosa.Program`: ONE abstract trace
+    discovers the decode GEMMs, the layer-wise hybrid IS/WS plan is
+    autotuned on that whole workload (EDP term of paper Sec. 3.5), and the
+    searched plan lands in the on-disk plan cache — a warm serving start
+    with the same model/slots/backend skips the search entirely.  The
+    program then carries the pinned chip (scfg.variation_seed) and a fresh
+    `EnergyLedger`, and the scheduler builds every jitted step from it."""
     from repro import rosa
-    from repro.core import mapping as M
 
     # act_per_vector: a request's numerics must not depend on which other
     # requests share its decode batch (per-tensor activation scales couple
     # rows; tests/test_serve.py::test_rosa_differential pins this)
     base = rosa.RosaConfig(backend=scfg.rosa_backend, act_per_vector=True)
-    # discovery pass: uniform WS engine, just to see the decode GEMMs
-    probe = rosa.Engine.from_config(base, ledger=rosa.EnergyLedger())
-    trace_serving_shapes(bundle, scfg, probe)
-    shapes = probe.ledger.layer_shapes(tag="decode")
+    probe = rosa.Engine.from_config(base)
+    params = bundle.abstract(jnp.float32)
+    batch = _abstract_decode_batch(bundle.cfg, scfg)
     # the traced GEMMs already carry the slot batch in m — batch=1 here,
     # or the concurrency would be priced twice
-    plan = M.hybrid_plan(M.profile_layers_fast(shapes, ROSA_OPTIMAL,
-                                               batch=1))
-    names = [s.name for s in shapes]
-    engine = rosa.Engine.from_hybrid_plan(base, plan, layers=names)
+    program = rosa.compile(
+        lambda eng, p, b: bundle.decode_step(p, b), probe, (params, batch),
+        autotune=rosa.AutotuneConfig(ope=ROSA_OPTIMAL, batch=1),
+        cache=cache)
     if scfg.variation_seed is not None:
         from repro.robust import variation as V
-        chip = V.sample_chip(jax.random.PRNGKey(scfg.variation_seed),
-                             dims={s.name: s.k for s in shapes})
-        engine = engine.with_variation(chip)
+        chip = V.sample_chip(
+            jax.random.PRNGKey(scfg.variation_seed),
+            dims={e.name: e.k for e in program.trace.entries})
+        program = program.with_variation(chip)
+    return program
+
+
+def build_serving_engine(bundle, scfg: ServeConfig, with_ledger: bool = True,
+                         cache=None):
+    """Engine for serving: `build_serving_program`'s autotuned engine
+    (hybrid plan from the decode trace, optional pinned chip), plus a
+    fresh `EnergyLedger` when requested."""
+    from repro import rosa
+
+    engine = build_serving_program(bundle, scfg, cache=cache).engine
     if with_ledger:
         engine = engine.with_ledger(rosa.EnergyLedger())
     return engine

@@ -128,36 +128,53 @@ class ServeReport:
 
 class Scheduler:
     """Builds the jitted serving machinery once; `run` replays a request
-    list under a policy.  With `scfg.rosa` the optical engine (pinned chip,
-    hybrid plan, energy ledger) is installed for every trace."""
+    list under a policy.  With `scfg.rosa` the decode step is compiled
+    into ONE `rosa.Program` (hybrid plan autotuned on the decode trace,
+    disk plan cache, pinned chip, energy ledger) and every jitted step —
+    decode, admit, prefill chunk, whole prefill, evict — is built from it,
+    so the frozen engine reaches each trace without a global stack."""
 
     def __init__(self, model_cfg, scfg: ServeConfig, params=None,
-                 init_seed: int = 0, mesh=None, engine=None):
+                 init_seed: int = 0, mesh=None, engine=None,
+                 plan_cache=None):
         self.cfg = serving_model_config(model_cfg, rosa=scfg.rosa)
         self.scfg = scfg
         self.bundle = build_model(self.cfg)
         self.engine = engine
+        self.program = None
         if scfg.rosa and engine is None:
-            from repro.serve.metrics import build_serving_engine
-            self.engine = build_serving_engine(self.bundle, scfg)
+            from repro import rosa
+            from repro.serve.metrics import build_serving_program
+            prog = build_serving_program(self.bundle, scfg,
+                                         cache=plan_cache)
+            self.program = prog.with_ledger(rosa.EnergyLedger())
+            self.engine = self.program.engine
+        elif engine is not None:
+            self.program = serving_program(self.bundle, scfg, engine)
         with self._engine_ctx():
             self.params = (params if params is not None
                            else self.bundle.init(jax.random.PRNGKey(init_seed)))
-        self.step = make_serve_step(self.bundle, scfg, mesh=mesh)
-        self.admit_step = make_admit_step(self.bundle, scfg)
-        self.chunk_fn = make_chunk_fn(self.bundle)
-        self.whole_fn = jax.jit(self.bundle.prefill)
-        self.evict = make_evict(self.bundle, scfg) if scfg.evict_on_done \
-            else None
+        self.step = make_serve_step(self.bundle, scfg, mesh=mesh,
+                                    program=self.program)
+        self.admit_step = make_admit_step(self.bundle, scfg,
+                                          program=self.program)
+        self.chunk_fn = make_chunk_fn(self.bundle, program=self.program)
+        self.whole_fn = (self.program.bind(self.bundle.prefill)
+                         if self.program is not None
+                         else jax.jit(self.bundle.prefill))
+        self.evict = make_evict(self.bundle, scfg, program=self.program) \
+            if scfg.evict_on_done else None
         self.null = null_admit(self.cfg, scfg)
         self.sample1 = jax.jit(sample_token)
         self.base_key = jax.random.PRNGKey(scfg.seed)
 
     def _engine_ctx(self):
+        """Ambient context for the few non-jitted call sites (param init);
+        every jitted step already carries the engine via `Program.bind`."""
         if self.engine is None:
             return contextlib.nullcontext()
         from repro import rosa
-        return rosa.use_engine(self.engine)
+        return rosa.engine_context(self.engine)
 
     def _scope(self, tag: str):
         """Ledger attribution scope around a jitted call site: only the
@@ -317,6 +334,26 @@ class Scheduler:
         return rep
 
 
+def serving_program(bundle, scfg: ServeConfig, engine):
+    """Freeze an explicitly-supplied engine into a `rosa.Program` (no plan
+    autotune — the caller's plan is taken as-is) so the serving machinery
+    can build its jitted steps from it."""
+    import jax.numpy as jnp
+
+    from repro import rosa
+    from repro.serve.metrics import _abstract_decode_batch
+
+    params = bundle.abstract(jnp.float32)
+    batch = _abstract_decode_batch(bundle.cfg, scfg)
+    # compile with the ledger detached: the runtime serving ledger must
+    # carry ONLY the scoped prefill/decode events the scheduler's step
+    # traces record, never untagged compile-time duplicates
+    prog = rosa.compile(lambda eng, p, b: bundle.decode_step(p, b),
+                        engine.with_ledger(None), (params, batch),
+                        autotune=None)
+    return prog.with_engine(engine)
+
+
 def _ledger_scope(engine, tag: str):
     if engine is not None and engine.ledger is not None:
         return engine.ledger.scope(tag)
@@ -336,18 +373,27 @@ def run_sequential(model_cfg, scfg: ServeConfig, params,
     interleaves, each request's stream must equal this oracle's exactly."""
     cfg = serving_model_config(model_cfg, rosa=scfg.rosa)
     bundle = build_model(cfg)
-    if scfg.rosa and engine is None:
-        from repro.serve.metrics import build_serving_engine
-        engine = build_serving_engine(bundle, scfg)
     ctx = contextlib.nullcontext()
+    program = None
+    if scfg.rosa and engine is None:
+        from repro import rosa
+        from repro.serve.metrics import build_serving_program
+        # reuse the ONE autotuned Program instead of compiling twice
+        program = build_serving_program(bundle, scfg) \
+            .with_ledger(rosa.EnergyLedger())
+        engine = program.engine
+    elif engine is not None:
+        program = serving_program(bundle, scfg, engine)
     if engine is not None:
         from repro import rosa
-        ctx = rosa.use_engine(engine)
-    chunk_fn = make_chunk_fn(bundle)
-    whole_fn = jax.jit(bundle.prefill)
-    decode1 = jax.jit(
-        lambda p, t, c: bundle.decode_step(
-            p, {"token": t, "pos": c["pos"], "cache": c}))
+        ctx = rosa.engine_context(engine)
+    chunk_fn = make_chunk_fn(bundle, program=program)
+    whole_fn = (program.bind(bundle.prefill) if program is not None
+                else jax.jit(bundle.prefill))
+    decode1_fn = lambda p, t, c: bundle.decode_step(
+        p, {"token": t, "pos": c["pos"], "cache": c})
+    decode1 = (program.bind(decode1_fn) if program is not None
+               else jax.jit(decode1_fn))
     sample1 = jax.jit(sample_token)
     base = jax.random.PRNGKey(scfg.seed)
     temp = jnp.float32(scfg.temperature if temperature is None

@@ -5,9 +5,12 @@ of inputs/weights (straight-through), then evaluate under DAC + thermal
 noise with a chosen per-layer IS/WS mapping.  All on synth-CIFAR
 (DESIGN.md §8 — CIFAR-10 itself is not available offline).
 
-Execution routes through `rosa.Engine`: training uses a uniform-QAT plan,
-noisy evaluation swaps in per-layer overrides (`ExecutionPlan.build`), and
-per-layer PRNG keys are folded by the engine from one base key.
+Execution routes through the compile-once `rosa.Program` API: a model +
+engine pair is compiled once (`cnn_program` -> `rosa.compile`), training
+differentiates through the program's frozen engine, evaluation calls the
+program with an explicit base key (per-layer PRNG keys are folded inside),
+and noisy evaluation compiles a derived program with per-layer overrides
+(`ExecutionPlan.build`).
 
 Variation-aware QAT: pass a chip `ensemble` (repro.robust.variation) and
 each training step pins chip ``step % n_chips`` on the engine — the model
@@ -29,7 +32,7 @@ from repro.core import mrr
 from repro.core.constants import ComputeMode, Mapping
 from repro.data.synth_cifar import train_test_split
 from repro.models.cnn import LITE_MODELS, LITE_SKIPS, cnn_apply, cnn_def
-from repro.models.module import init_params
+from repro.models.module import abstract_params, init_params
 
 QAT_CFG = rosa.RosaConfig(mode=ComputeMode.MIXED, noise=mrr.IDEAL)
 
@@ -38,6 +41,27 @@ def qat_engine(model: str, key: jax.Array | None = None) -> rosa.Engine:
     """Uniform 8-bit QAT engine for one lite model (all layers QAT_CFG)."""
     names = [s.name for s in LITE_MODELS[model]]
     return rosa.Engine.from_config(QAT_CFG, layers=names, key=key)
+
+
+def cnn_program(model: str, engine: rosa.Engine | None = None, *,
+                example_batch: int = 8) -> rosa.Program:
+    """Compile one lite CNN against `engine` into a `rosa.Program`.
+
+    No plan autotune: the engine's plan (uniform QAT, per-layer override,
+    hybrid, ...) is frozen as-is; the compile still captures the named-GEMM
+    `ProgramTrace` and re-prices it onto the engine's ledger when one is
+    attached.  The program is shape-polymorphic over the batch dim (jit
+    retraces per input shape); `example_batch` only sizes the trace."""
+    specs = LITE_MODELS[model]
+    skips = LITE_SKIPS.get(model)
+    engine = engine if engine is not None else rosa.Engine.dense()
+
+    def apply_fn(eng, params, x):
+        return cnn_apply(params, specs, x, eng, residual_from=skips)
+
+    skel = abstract_params(cnn_def(specs), jnp.float32)
+    x = jax.ShapeDtypeStruct((example_batch, 32, 32, 3), jnp.float32)
+    return rosa.compile(apply_fn, engine, (skel, x), autotune=None)
 
 
 def _loss(params, specs, skips, x, y, engine, key=None):
@@ -62,7 +86,12 @@ def train_cnn(model: str = "alexnet", steps: int = 400, batch: int = 64,
     (xtr, ytr), (xte, yte) = train_test_split(n_train=n_train, seed=seed)
     key = jax.random.PRNGKey(seed)
     params = init_params(cnn_def(specs), key)
-    engine = qat_engine(model) if qat else rosa.Engine.dense()
+    # compile once; the training step differentiates through the program's
+    # frozen engine (same plan, straight-through grads), evaluation calls
+    # the program itself
+    program = cnn_program(model, qat_engine(model) if qat
+                          else rosa.Engine.dense())
+    engine = program.engine
     n_chips = 0
     if ensemble is not None:
         from repro.robust.variation import ensemble_size
@@ -97,7 +126,7 @@ def train_cnn(model: str = "alexnet", steps: int = 400, batch: int = 64,
         if verbose and i % 100 == 0:
             print(f"  step {i} loss {float(loss):.3f}")
 
-    acc = evaluate_cnn(params, model, engine)
+    acc = evaluate_cnn(params, model, program=program)
     return params, acc
 
 
@@ -109,27 +138,23 @@ def _test_set(seed: int = 0):
 
 def evaluate_cnn(params, model: str, engine: rosa.Engine | None = None,
                  key: jax.Array | None = None, n_mc: int = 1,
-                 seed: int = 0) -> float:
-    """Test accuracy (%); with a noisy engine and n_mc>1, MC-average over
-    base keys (per-layer keys are folded by the engine)."""
-    specs = LITE_MODELS[model]
-    skips = LITE_SKIPS.get(model)
+                 seed: int = 0, program: rosa.Program | None = None) -> float:
+    """Test accuracy (%); with a noisy engine/program and n_mc>1,
+    MC-average over base keys (per-layer keys are folded by the engine).
+    Pass a pre-compiled `program` to skip the per-call `rosa.compile`."""
     xte, yte = _test_set(seed)
-    if engine is None:
-        engine = rosa.Engine.dense()
+    if program is None:
+        program = cnn_program(model, engine)
 
-    @jax.jit
-    def acc_of(params, k):
-        logits = cnn_apply(params, specs, xte, engine, k,
-                           residual_from=skips)
+    def acc_of(k):
+        logits = program(params, xte, key=k)
         return jnp.mean(jnp.argmax(logits, -1) == yte)
 
     if key is None and n_mc == 1:
-        return float(acc_of(params, None)) * 100.0
+        return float(acc_of(None)) * 100.0
     keys = jax.random.split(key if key is not None
                             else jax.random.PRNGKey(7), n_mc)
-    return float(jnp.mean(jnp.stack([acc_of(params, k)
-                                     for k in keys]))) * 100.0
+    return float(jnp.mean(jnp.stack([acc_of(k) for k in keys]))) * 100.0
 
 
 def layer_noise_profile(params, model: str, *,
@@ -140,15 +165,16 @@ def layer_noise_profile(params, model: str, *,
     specs = LITE_MODELS[model]
     names = [s.name for s in specs]
     base = qat_engine(model)
-    clean = evaluate_cnn(params, model, base)
+    clean = evaluate_cnn(params, model, program=cnn_program(model, base))
     out: dict[str, dict[str, float]] = {}
     key = jax.random.PRNGKey(seed + 100)
     for s in specs:
         out[s.name] = {}
         for mp in (Mapping.IS, Mapping.WS):
             noisy = dataclasses.replace(QAT_CFG, mapping=mp, noise=noise)
-            engine = base.with_plan(rosa.ExecutionPlan.build(
-                QAT_CFG, {s.name: noisy}, layers=names))
-            acc = evaluate_cnn(params, model, engine, key=key, n_mc=n_mc)
+            prog = cnn_program(model, base.with_plan(rosa.ExecutionPlan.build(
+                QAT_CFG, {s.name: noisy}, layers=names)))
+            acc = evaluate_cnn(params, model, program=prog, key=key,
+                               n_mc=n_mc)
             out[s.name][mp.value] = max(clean - acc, 0.0)
     return {"clean": clean, "layers": out}

@@ -8,3 +8,13 @@ import pytest
 @pytest.fixture(scope="session")
 def key():
     return jax.random.PRNGKey(0)
+
+
+@pytest.fixture(autouse=True)
+def _hermetic_plan_cache(tmp_path_factory, monkeypatch):
+    """Point the rosa.compile plan cache at a session-private directory so
+    tests never read a stale plan from (or write into) the user's real
+    ~/.cache — cache-behaviour tests pass their own `cache=` explicitly."""
+    monkeypatch.setenv(
+        "ROSA_PLAN_CACHE",
+        str(tmp_path_factory.getbasetemp() / "rosa-plan-cache"))

@@ -6,7 +6,7 @@ import numpy as np
 import pytest
 
 from repro.core import osa, quant
-from repro.core.onn_linear import RosaConfig, rosa_matmul
+from repro.rosa import RosaConfig, rosa_matmul
 from repro.core import mrr
 from repro.core.constants import ComputeMode, Mapping
 
