@@ -26,7 +26,7 @@ def run(verbose: bool = True, osa: bool = False) -> dict:
         hdr = f"{'config':16s} {'geomean':>8s} {'worst':>8s} {'M':>8s}  " \
             + " ".join(f"{w.name[:9]:>9s}" for w in wls)
         print(hdr)
-        for p in pts[:10] + [deap, compact]:
+        for p in [*pts[:10], deap, compact]:
             row = " ".join(f"{p.rel_edp[w.name]:9.3f}" for w in wls)
             print(f"{p.label:16s} {p.geomean:8.3f} {p.worst:8.3f} "
                   f"{p.metric:8.3f}  {row}")

@@ -31,7 +31,7 @@ def run(verbose: bool = True) -> dict:
     if verbose:
         print(f"{'mode':22s} {'OPS':>12s} {'latency[s]':>12s} "
               f"{'energy[J]':>12s} {'EDP[J*s]':>12s} {'OADC[J]':>10s}")
-        for k, r in rows.items():
+        for r in rows.values():
             print(f"{r['name']:22s} {r['ops']:12.3e} {r['latency']:12.3e} "
                   f"{r['energy']:12.3e} {r['edp']:12.3e} "
                   f"{r['oadc_energy']:10.3e}")

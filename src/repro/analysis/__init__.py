@@ -1,0 +1,51 @@
+"""`repro.analysis` — static verification of compiled optical programs.
+
+The stack's core invariants are compile-time-decidable but invisible to
+output-level tests: per-shot noise keys must be independent (one reused
+key correlates the whole Monte-Carlo ensemble), serving-state donations
+must really alias (or decode doubles its HBM footprint), Pallas kernels
+must tile every zoo shape, hot loops must stay host-callback-free.  This
+package decides them by inspecting jaxprs and optimized HLO.
+
+Three surfaces:
+
+  * `rosa.compile(..., verify="error"|"warn"|"off")` runs the pass on the
+    compiled Program (`verify_program` is the hook);
+  * `python -m repro.analysis` scans the model zoo + serving steps and
+    emits bench-schema JSON, exiting non-zero on un-baselined findings;
+  * CI runs the CLI against the committed `analysis_baseline.json`.
+
+Check catalog (each module under `checks/` registers itself):
+
+  prng       PRNG001 key reuse / PRNG002 constant-baked key /
+             PRNG003 constant seed / PRNG004 unfolded key in a loop
+  donation   DON001 dropped donation / DON002 undonated hot-path state
+  recompile  REC001 weak scalar / REC002 f64 promotion /
+             REC003 unhashable static
+  pallas     PAL001 VMEM overflow / PAL002 padding waste /
+             PAL003 tile contract violation
+  purity     PUR001 callback in loop / PUR002 callback in hot path
+"""
+
+from repro.analysis.baseline import load_baseline, write_baseline
+from repro.analysis.findings import (AnalysisReport, Finding, Severity,
+                                     VerificationError)
+from repro.analysis.registry import all_checks, register, run_checks
+from repro.analysis.target import AnalysisTarget, program_target
+
+__all__ = [
+    "AnalysisReport", "AnalysisTarget", "Finding", "Severity",
+    "VerificationError", "all_checks", "load_baseline", "program_target",
+    "register", "run_checks", "verify_program", "write_baseline",
+]
+
+
+def verify_program(program, example_args, *, name: str = "program",
+                   checks=None) -> AnalysisReport:
+    """Run the static checks over a compiled `rosa.Program`.
+
+    Traces the program's jitted entry with an abstract (never constant)
+    key and verifies its declared donations against the compiled HLO —
+    this is what `rosa.compile(verify=...)` calls."""
+    return run_checks([program_target(program, example_args, name=name)],
+                      checks=checks)

@@ -1,0 +1,4 @@
+"""Check modules: importing this package populates the registry."""
+
+from repro.analysis.checks import (donation, pallas, prng,  # noqa: F401
+                                   purity, recompile)

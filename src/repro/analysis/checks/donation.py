@@ -1,0 +1,71 @@
+"""Donation verification: declared donate_argnums vs compiled reality.
+
+`donate_argnums` is a *permission*, not a guarantee: XLA only aliases a
+donated buffer into an output of identical shape/dtype, and jit silently
+drops donations on unused arguments — a refactor that stops returning the
+updated cache keeps the declaration, loses the alias, and doubles decode's
+HBM footprint with zero warning.  The compiled module header's
+`input_output_alias` map is the ground truth, so the check compares the
+donated argument's array leaves (as a shape multiset) against the aliased
+entry parameters.
+
+Findings:
+
+  DON001 ERROR    a declared donated buffer produced no input_output_alias
+  DON002 WARNING  a hot-path jit (serving step) declares no donation at
+                  all while taking multi-buffer state arguments
+"""
+
+from __future__ import annotations
+
+from collections import Counter
+
+from repro.analysis.findings import Finding, Severity
+from repro.analysis.hlo import (entry_parameter_shapes,
+                                parse_input_output_aliases)
+from repro.analysis.registry import register
+from repro.analysis.target import AnalysisTarget
+
+
+def _norm(shape_text: str) -> str:
+    """Strip layout annotations: 'f32[4,8]{1,0}' -> 'f32[4,8]'."""
+    return shape_text.split("{")[0].strip()
+
+
+@register("donation")
+def check_donation(target: AnalysisTarget) -> list[Finding]:
+    if target.fn is None:
+        return []
+    if not target.donate_argnums:
+        if target.hot_path:
+            return [Finding(
+                check="donation", code="DON002",
+                severity=Severity.WARNING, subject=target.name,
+                location="donate_argnums=()",
+                message=("hot-path jit declares no donation: per-step "
+                         "state buffers are copied every tick — donate "
+                         "the state argument"))]
+        return []
+
+    declared = Counter(_norm(s) for s in target.donated_leaf_shapes())
+    if not declared:
+        return []
+
+    hlo = target.compiled_text()
+    params = entry_parameter_shapes(hlo)
+    aliased = Counter(
+        _norm(params.get(p, "?"))
+        for p, _tuple_idx in parse_input_output_aliases(hlo))
+
+    findings: list[Finding] = []
+    missing = declared - aliased
+    for shape, count in sorted(missing.items()):
+        findings.append(Finding(
+            check="donation", code="DON001", severity=Severity.ERROR,
+            subject=target.name, location=f"donated {shape}",
+            message=(f"{count} donated buffer(s) of shape {shape} "
+                     "produced NO input_output_alias in the compiled "
+                     "module: the donation was dropped (buffer unused, "
+                     "or no same-shaped output) and the step pays a full "
+                     "copy — fix the dataflow or remove the donation")))
+    return findings

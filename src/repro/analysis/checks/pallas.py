@@ -1,0 +1,87 @@
+"""Pallas preflight: every zoo shape checked against the kernel contracts.
+
+The three `kernels/` trees each export a `preflight()` that mirrors their
+wrapper's padding/tiling logic without launching anything; this check maps
+a target's workload shapes through them and converts the results into
+findings — BEFORE the first interpret-mode fallback ever hides a shape
+that would fault on real hardware.
+
+Findings:
+
+  PAL001 ERROR    estimated VMEM working set exceeds the ~16 MiB/core
+                  budget: the kernel cannot stage its blocks on chip
+  PAL002 WARNING  padding waste > 50%: the shape is legal but a large
+                  share of the MACs multiply zeros — re-block or re-shape
+  PAL003 ERROR    hard contract violation (a block/lane divisibility the
+                  MXU/VPU tiling cannot accept); soft issues (lane dims
+                  the compiler pads at a lane-utilization cost) downgrade
+                  to WARNING
+"""
+
+from __future__ import annotations
+
+from repro.analysis.findings import Finding, Severity
+from repro.analysis.registry import register
+from repro.analysis.target import AnalysisTarget
+
+# ~16 MB/core of VMEM (see /opt/skills/guides: Memory Hierarchy); the
+# budget is the full core's — anything above is an outright compile fault,
+# and real kernels co-resident with the pipeline should stay well under.
+VMEM_BUDGET_BYTES = 16 * 1024 * 1024
+PAD_WASTE_WARN = 0.5
+
+
+def _findings_from(rep: dict, subject: str, where: str) -> list[Finding]:
+    out: list[Finding] = []
+    kern = rep["kernel"]
+    loc = f"{kern}:{where}"
+    for issue in rep["issues"]:
+        out.append(Finding(
+            check="pallas", code="PAL003", severity=Severity.ERROR,
+            subject=subject, location=loc,
+            message=f"kernel contract violation: {issue}"))
+    for issue in rep.get("soft_issues", ()):
+        out.append(Finding(
+            check="pallas", code="PAL003", severity=Severity.WARNING,
+            subject=subject, location=loc,
+            message=f"kernel tiling concern: {issue}"))
+    if rep["vmem_bytes"] > VMEM_BUDGET_BYTES:
+        out.append(Finding(
+            check="pallas", code="PAL001", severity=Severity.ERROR,
+            subject=subject, location=loc,
+            message=(f"estimated VMEM working set "
+                     f"{rep['vmem_bytes'] / 2**20:.1f} MiB exceeds the "
+                     f"{VMEM_BUDGET_BYTES / 2**20:.0f} MiB/core budget "
+                     f"(grid {rep['grid']}): shrink the block shape")))
+    if rep["pad_waste"] > PAD_WASTE_WARN:
+        out.append(Finding(
+            check="pallas", code="PAL002", severity=Severity.WARNING,
+            subject=subject, location=loc,
+            message=(f"padding inflates the kernel's work by "
+                     f"{rep['pad_waste']:.0%} (grid {rep['grid']}): "
+                     "consider smaller blocks or a padded-free layer "
+                     "width")))
+    return out
+
+
+@register("pallas")
+def check_pallas(target: AnalysisTarget) -> list[Finding]:
+    if not target.gemm_shapes and not target.ssd_shapes:
+        return []
+    from repro.kernels.mrr_transfer import ops as mrr_ops
+    from repro.kernels.osa_matmul import ops as osa_ops
+    from repro.kernels.ssd_scan import ops as ssd_ops
+
+    findings: list[Finding] = []
+    for name, m, k, n in target.gemm_shapes:
+        where = f"{name} {m}x{k}x{n}"
+        findings += _findings_from(
+            osa_ops.preflight(m, k, n), target.name, where)
+        # the WS path realizes the (k, n) weight sheet through mrr_transfer
+        findings += _findings_from(
+            mrr_ops.preflight(k * n), target.name, where)
+    for name, bsz, l, h, p, s_dim in target.ssd_shapes:
+        findings += _findings_from(
+            ssd_ops.preflight(bsz, l, h, p, s_dim), target.name,
+            f"{name} B{bsz}xL{l}xH{h}xP{p}xS{s_dim}")
+    return findings

@@ -1,0 +1,307 @@
+"""PRNG discipline: key provenance through the jaxpr.
+
+The paper's robustness numbers assume every noise draw (DAC quantization,
+thermal crosstalk, per-layer variation) is statistically independent; one
+reused key silently correlates the Monte-Carlo ensemble.  Whether a key is
+reused is decidable from the jaxpr: jax's functional PRNG funnels every
+distribution through `random_bits`, and keys move through a small closed
+set of primitives (`random_wrap`/`random_unwrap` are representation casts,
+`random_split`/`random_fold_in` derive fresh streams).
+
+The walker assigns every key value a provenance id:
+
+  * `random_wrap` / `random_unwrap` / `broadcast_in_dim` / `reshape` /
+    `convert_element_type` preserve identity (same bits, same stream);
+  * `random_split` / `random_fold_in` derive a child id — MEMOIZED on
+    (parent, primitive, literal operands, static params), so folding the
+    same constants twice yields the SAME id: two layers folding an equal
+    (name-CRC, step) pair are correctly seen as one correlated stream;
+  * slicing a split's stack derives per-half ids (memoized on indices);
+  * `random_bits` CONSUMES its key id.
+
+Findings:
+
+  PRNG001 ERROR    one key id consumed by >= 2 independent draws
+  PRNG002 WARNING  a constant-baked key (captured PRNGKey(0) array)
+                   feeding draws — every run realizes identical noise
+  PRNG003 WARNING  `random_seed` of a compile-time constant inside traced
+                   code (a PRNGKey(const) baked into the computation)
+  PRNG004 ERROR    a loop-invariant key consumed inside a scan/while body
+                   with no iteration-dependent fold — every iteration
+                   draws the SAME noise
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+
+import numpy as np
+
+from repro.analysis.findings import Finding, Severity
+from repro.analysis.jaxprs import ClosedJaxpr, Literal, sub_jaxprs
+from repro.analysis.registry import register
+from repro.analysis.target import AnalysisTarget
+
+# identity-preserving ops: the output is the same key material
+_IDENTITY = {"random_wrap", "random_unwrap", "broadcast_in_dim", "reshape",
+             "convert_element_type", "copy"}
+# derivation ops: output is a fresh stream derived from the input key
+_DERIVE = {"random_split", "random_fold_in", "threefry2x32"}
+# stack-indexing ops: picking one key out of a split's stack
+_INDEX = {"slice", "dynamic_slice", "squeeze", "gather"}
+_CONSUME = {"random_bits"}
+
+
+def _is_key_aval(aval) -> bool:
+    """Key-typed (new-style) or a raw uint32[..., 2] counter pair."""
+    try:
+        import jax
+        if jax.dtypes.issubdtype(aval.dtype, jax.dtypes.prng_key):
+            return True
+    except (TypeError, AttributeError):
+        pass
+    return (getattr(aval, "dtype", None) == np.uint32
+            and tuple(getattr(aval, "shape", ()))[-1:] == (2,))
+
+
+@dataclasses.dataclass(frozen=True)
+class _KeyInfo:
+    kid: int
+    origin: str
+    constant: bool = False       # traces back to a captured constant array
+    loop_const: bool = False     # loop-invariant inside the current body
+
+
+class _Walker:
+    def __init__(self, subject: str):
+        self.subject = subject
+        self.fresh = itertools.count()
+        self.memo: dict[tuple, int] = {}
+        self.consumed: dict[int, list[str]] = {}
+        self.infos: dict[int, _KeyInfo] = {}
+        self.findings: list[Finding] = []
+
+    # -- helpers -------------------------------------------------------------
+    def new_info(self, origin: str, constant=False, loop_const=False
+                 ) -> _KeyInfo:
+        info = _KeyInfo(next(self.fresh), origin, constant, loop_const)
+        self.infos[info.kid] = info
+        return info
+
+    def derived(self, parent: _KeyInfo, eqn, loc: str,
+                literal_ops: tuple, loop_const: bool) -> _KeyInfo:
+        static = tuple(sorted(
+            (k, str(v)) for k, v in eqn.params.items()
+            if isinstance(v, (int, float, str, bool, tuple))))
+        key = (parent.kid, eqn.primitive.name, literal_ops, static)
+        kid = self.memo.get(key)
+        if kid is None:
+            info = self.new_info(f"{parent.origin}->{loc}",
+                                 constant=parent.constant,
+                                 loop_const=loop_const)
+            self.memo[key] = info.kid
+            return info
+        return dataclasses.replace(self.infos[kid], loop_const=loop_const)
+
+    def consume(self, info: _KeyInfo, loc: str, in_loop: bool):
+        self.consumed.setdefault(info.kid, []).append(loc)
+        if info.constant:
+            self.findings.append(Finding(
+                check="prng", code="PRNG002", severity=Severity.WARNING,
+                subject=self.subject, location=info.origin,
+                message=("constant-baked PRNG key consumed at "
+                         f"{loc}: every run realizes identical noise — "
+                         "thread an explicit key instead")))
+        if in_loop and info.loop_const:
+            self.findings.append(Finding(
+                check="prng", code="PRNG004", severity=Severity.ERROR,
+                subject=self.subject, location=loc,
+                message=("loop-invariant key consumed inside a loop body "
+                         "with no iteration-dependent fold_in: every "
+                         "iteration draws the SAME noise "
+                         f"(key origin: {info.origin})")))
+
+    # -- the walk ------------------------------------------------------------
+    def walk(self, closed: ClosedJaxpr, env: dict, path: str,
+             varying: set | None, depth: int = 0):
+        """env: Var -> _KeyInfo; varying: loop-varying Vars of the current
+        loop body (None outside loops)."""
+        if depth > 64:
+            return
+        in_loop = varying is not None
+        for cv, const in zip(closed.jaxpr.constvars, closed.consts):
+            if cv not in env and _is_key_aval(cv.aval):
+                env[cv] = self.new_info(
+                    f"{path or 'jaxpr'}:captured-const"
+                    f"{tuple(np.shape(const))}", constant=True,
+                    loop_const=in_loop)
+
+        def info_of(atom):
+            return None if isinstance(atom, Literal) else env.get(atom)
+
+        def is_varying(atom):
+            return (varying is not None and not isinstance(atom, Literal)
+                    and atom in varying)
+
+        for eqn in closed.jaxpr.eqns:
+            prim = eqn.primitive.name
+            loc = f"{path}/{prim}".lstrip("/")
+            name = eqn.params.get("name")
+            if isinstance(name, str) and name:
+                loc = f"{loc}:{name}"
+
+            if varying is not None and any(is_varying(a)
+                                           for a in eqn.invars):
+                varying.update(eqn.outvars)
+
+            if prim == "random_seed":
+                op = eqn.invars[0]
+                const_seed = isinstance(op, Literal) or (
+                    op in closed.jaxpr.constvars)
+                info = self.new_info(f"{loc}:seed", constant=const_seed,
+                                     loop_const=in_loop
+                                     and not is_varying(op))
+                env[eqn.outvars[0]] = info
+                if const_seed:
+                    self.findings.append(Finding(
+                        check="prng", code="PRNG003",
+                        severity=Severity.WARNING, subject=self.subject,
+                        location=loc,
+                        message=("PRNG key seeded from a compile-time "
+                                 "constant inside traced code — every run "
+                                 "draws the same stream")))
+                continue
+
+            if prim in _IDENTITY:
+                src = info_of(eqn.invars[0]) if eqn.invars else None
+                if src is not None:
+                    for ov in eqn.outvars:
+                        env[ov] = src
+                continue
+
+            if prim in _DERIVE or prim in _INDEX:
+                src = next((i for a in eqn.invars
+                            if (i := info_of(a)) is not None), None)
+                if src is not None:
+                    other = tuple(
+                        repr(a.val) if isinstance(a, Literal) else None
+                        for a in eqn.invars if info_of(a) is None)
+                    # the derived stream stays loop-invariant only if the
+                    # key was AND nothing folded in varies per iteration
+                    lc = src.loop_const and not any(
+                        is_varying(a) for a in eqn.invars)
+                    d = self.derived(src, eqn, loc, other, lc)
+                    for ov in eqn.outvars:
+                        env[ov] = d
+                continue
+
+            if prim in _CONSUME:
+                src = next((i for a in eqn.invars
+                            if (i := info_of(a)) is not None), None)
+                if src is not None:
+                    self.consume(src, loc, in_loop)
+                continue
+
+            # -- recursion into nested jaxprs -------------------------------
+            subs = list(sub_jaxprs(eqn))
+            if not subs:
+                continue
+            if prim == "while":
+                self._walk_while(eqn, env, loc, varying, depth)
+                continue
+            loop = prim == "scan"
+            nconsts = eqn.params.get("num_consts", 0) if loop else 0
+            for _pname, sub in subs:
+                inner = sub.jaxpr.invars
+                outer = list(eqn.invars)
+                # positional when lengths agree, else align tails (covers
+                # the custom_*_call wrappers that prepend const args)
+                if len(outer) > len(inner):
+                    outer = outer[len(outer) - len(inner):]
+                sub_env = dict(env)
+                sub_varying = varying
+                if loop:
+                    sub_varying = set(inner[nconsts:])
+                elif varying is not None:
+                    sub_varying = set()
+                for pos, (iv, ov) in enumerate(zip(inner, outer)):
+                    if sub_varying is not None and is_varying(ov):
+                        sub_varying.add(iv)
+                    src = info_of(ov)
+                    if src is not None:
+                        if loop and pos < nconsts:
+                            src = dataclasses.replace(src, loop_const=True)
+                        sub_env[iv] = src
+                self.walk(sub, sub_env, f"{loc}", sub_varying, depth + 1)
+                # map results back (pjit/cond: positional; scan: carries+ys)
+                inner_out = sub.jaxpr.outvars
+                if len(inner_out) == len(eqn.outvars):
+                    for iv, ov in zip(inner_out, eqn.outvars):
+                        src = None if isinstance(iv, Literal) \
+                            else sub_env.get(iv)
+                        if src is not None:
+                            env[ov] = src
+
+    def _walk_while(self, eqn, env, loc, varying, depth):
+        cn = eqn.params.get("cond_nconsts", 0)
+        bn = eqn.params.get("body_nconsts", 0)
+        body = eqn.params.get("body_jaxpr")
+        cond = eqn.params.get("cond_jaxpr")
+        carry = list(eqn.invars[cn + bn:])
+
+        def seed_env(consts, sub):
+            sub_env = dict(env)
+            inner = sub.jaxpr.invars
+            sub_varying = set(inner[len(consts):])
+            for pos, (iv, ov) in enumerate(zip(inner, consts + carry)):
+                src = None if isinstance(ov, Literal) else env.get(ov)
+                if src is not None:
+                    if pos < len(consts):
+                        src = dataclasses.replace(src, loop_const=True)
+                    sub_env[iv] = src
+            return sub_env, sub_varying
+
+        if body is not None:
+            sub_env, sub_varying = seed_env(
+                list(eqn.invars[cn:cn + bn]), body)
+            self.walk(body, sub_env, f"{loc}/body", sub_varying, depth + 1)
+        if cond is not None:
+            sub_env, sub_varying = seed_env(list(eqn.invars[:cn]), cond)
+            self.walk(cond, sub_env, f"{loc}/cond", sub_varying, depth + 1)
+
+
+@register("prng")
+def check_prng(target: AnalysisTarget) -> list[Finding]:
+    if target.fn is None:
+        return []
+    closed = target.try_jaxpr()
+    if closed is None:
+        return []
+    walker = _Walker(target.name)
+    env: dict = {}
+    for iv in closed.jaxpr.invars:
+        if _is_key_aval(iv.aval):
+            env[iv] = walker.new_info(f"arg:{iv.aval.str_short()}")
+    walker.walk(closed, env, "", None)
+
+    findings = list(walker.findings)
+    for kid, locs in walker.consumed.items():
+        if len(locs) >= 2:
+            info = walker.infos[kid]
+            shown = ", ".join(locs[:4]) + ("..." if len(locs) > 4 else "")
+            findings.append(Finding(
+                check="prng", code="PRNG001", severity=Severity.ERROR,
+                subject=target.name, location=info.origin,
+                message=(f"PRNG key consumed by {len(locs)} independent "
+                         f"draws ({shown}): the draws are perfectly "
+                         "correlated — split or fold_in a fresh key per "
+                         "draw")))
+    # dedupe (a PRNG002/004 can fire once per consumption of one stream)
+    seen: set[str] = set()
+    out = []
+    for f in findings:
+        if f.fingerprint not in seen:
+            seen.add(f.fingerprint)
+            out.append(f)
+    return out

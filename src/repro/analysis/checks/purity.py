@@ -1,0 +1,53 @@
+"""Hot-loop purity: no host round-trips where the step rate lives.
+
+A `debug.print` / host callback inside a scanned layer stack or a serving
+decode step forces a device->host sync per iteration; on a real accelerator
+that serializes the pipeline the continuous-batching scheduler exists to
+keep full.  All of these appear in the jaxpr as callback primitives, so
+the check is a walk counting loop depth.
+
+Findings:
+
+  PUR001 ERROR    callback primitive inside a scan/while body
+  PUR002 WARNING  callback primitive anywhere in a hot-path jit
+                  (serving step) — even outside loops it syncs per tick
+"""
+
+from __future__ import annotations
+
+from repro.analysis.findings import Finding, Severity
+from repro.analysis.jaxprs import eqn_location, iter_eqns
+from repro.analysis.registry import register
+from repro.analysis.target import AnalysisTarget
+
+_CALLBACKS = {"debug_callback", "pure_callback", "io_callback", "callback",
+              "host_callback", "outside_call", "debug_print"}
+
+
+@register("purity")
+def check_purity(target: AnalysisTarget) -> list[Finding]:
+    if target.fn is None:
+        return []
+    closed = target.try_jaxpr()
+    if closed is None:
+        return []
+    findings: list[Finding] = []
+    for eqn, path, loop_depth in iter_eqns(closed):
+        if eqn.primitive.name not in _CALLBACKS:
+            continue
+        loc = eqn_location(eqn, path)
+        if loop_depth > 0:
+            findings.append(Finding(
+                check="purity", code="PUR001", severity=Severity.ERROR,
+                subject=target.name, location=loc,
+                message=(f"host callback `{eqn.primitive.name}` inside a "
+                         f"loop body (depth {loop_depth}): one device->"
+                         "host sync PER ITERATION — hoist it out or guard "
+                         "it behind a debug build")))
+        elif target.hot_path:
+            findings.append(Finding(
+                check="purity", code="PUR002", severity=Severity.WARNING,
+                subject=target.name, location=loc,
+                message=(f"host callback `{eqn.primitive.name}` in a "
+                         "hot-path step: syncs the device every tick")))
+    return findings

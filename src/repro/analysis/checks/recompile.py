@@ -1,0 +1,102 @@
+"""Recompile / promotion hazards.
+
+Three classes of silently-expensive mistakes, all visible statically:
+
+  REC001 WARNING  weak-typed traced argument (a bare Python scalar): its
+                  value participates in type promotion, and passing it
+                  where a static is expected retraces per value
+  REC002 WARNING  f64 values appear in the jaxpr while inputs are <= f32:
+                  a silent promotion doubles bandwidth (and diverges from
+                  the f32 analog-path numerics the paper calibrates)
+  REC003 ERROR    an example value at a static_argnums position is
+                  unhashable — every call raises (or, for dict-likes that
+                  sneak through custom jits, retraces unconditionally)
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.analysis.findings import Finding, Severity
+from repro.analysis.jaxprs import eqn_location, iter_eqns
+from repro.analysis.registry import register
+from repro.analysis.target import AnalysisTarget
+
+
+def _np_dtype(dt):
+    """np.dtype(dt), or None for JAX extended dtypes (key<fry> etc.) that
+    numpy cannot interpret."""
+    if dt is None:
+        return None
+    try:
+        return np.dtype(dt)
+    except TypeError:
+        return None
+
+
+@register("recompile")
+def check_recompile(target: AnalysisTarget) -> list[Finding]:
+    if target.fn is None:
+        return []
+    findings: list[Finding] = []
+
+    for i in target.static_argnums:
+        if i >= len(target.example_args):
+            continue
+        try:
+            hash(target.example_args[i])
+        except TypeError:
+            findings.append(Finding(
+                check="recompile", code="REC003", severity=Severity.ERROR,
+                subject=target.name, location=f"static arg {i}",
+                message=(f"static_argnums position {i} holds an "
+                         f"unhashable "
+                         f"{type(target.example_args[i]).__name__}: jit "
+                         "cannot key its cache on it — freeze it "
+                         "(tuple/dataclass(frozen=True)) or make it a "
+                         "traced argument")))
+    if findings:
+        # an unhashable static can't even trace — report it rather than
+        # crashing on make_jaxpr below
+        return findings
+
+    closed = target.jaxpr()
+    for idx, iv in enumerate(closed.jaxpr.invars):
+        aval = iv.aval
+        if getattr(aval, "weak_type", False) \
+                and getattr(aval, "shape", None) == ():
+            findings.append(Finding(
+                check="recompile", code="REC001",
+                severity=Severity.WARNING, subject=target.name,
+                location=f"arg {idx} ({aval.str_short()})",
+                message=("weak-typed scalar argument: a bare Python "
+                         "number reached the trace — it promotes "
+                         "surrounding arrays and invites per-value "
+                         "retraces; pass jnp.asarray(x, dtype) "
+                         "explicitly")))
+
+    max_in_bits = 0
+    for iv in closed.jaxpr.invars:
+        dt = _np_dtype(getattr(iv.aval, "dtype", None))
+        if dt is not None and np.issubdtype(dt, np.floating):
+            max_in_bits = max(max_in_bits, dt.itemsize * 8)
+    if max_in_bits and max_in_bits <= 32:
+        for eqn, path, _ in iter_eqns(closed):
+            for ov in eqn.outvars:
+                dt = _np_dtype(getattr(getattr(ov, "aval", None),
+                                       "dtype", None))
+                if dt == np.float64:
+                    findings.append(Finding(
+                        check="recompile", code="REC002",
+                        severity=Severity.WARNING, subject=target.name,
+                        location=eqn_location(eqn, path),
+                        message=("float64 value produced from <= f32 "
+                                 "inputs: silent promotion doubles "
+                                 "bandwidth — check for Python-float "
+                                 "constants or np.float64 scalars on "
+                                 "this path")))
+                    break
+            else:
+                continue
+            break
+    return findings

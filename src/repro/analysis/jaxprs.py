@@ -1,0 +1,70 @@
+"""Jaxpr walking helpers shared by the jaxpr-level checks.
+
+jax moved the core IR types between releases (`jax.core` -> portions of
+`jax.extend.core`); everything version-sensitive is funneled through here
+so the check modules stay import-stable across the CI jax matrix.
+"""
+
+from __future__ import annotations
+
+from typing import Iterator
+
+try:                                    # jax >= 0.6 home
+    from jax.extend.core import ClosedJaxpr, Jaxpr, Literal, Var
+except ImportError:                     # pragma: no cover - older jax
+    from jax.core import ClosedJaxpr, Jaxpr, Literal, Var
+
+__all__ = ["ClosedJaxpr", "Jaxpr", "Literal", "Var", "sub_jaxprs",
+           "iter_eqns", "eqn_location"]
+
+# primitives whose sub-jaxpr executes once per loop iteration
+LOOP_PRIMITIVES = ("scan", "while")
+
+
+def _as_closed(j) -> ClosedJaxpr:
+    return j if isinstance(j, ClosedJaxpr) else ClosedJaxpr(j, ())
+
+
+def sub_jaxprs(eqn) -> Iterator[tuple[str, ClosedJaxpr]]:
+    """Every jaxpr nested in `eqn.params`, as (param_name, ClosedJaxpr).
+
+    Covers pjit ("jaxpr"), scan ("jaxpr"), while ("cond_jaxpr" /
+    "body_jaxpr"), cond ("branches"), remat ("jaxpr", a raw Jaxpr) and the
+    custom_[jv]p call wrappers — anything a later jax adds that stores a
+    jaxpr-typed param is picked up structurally, not by name."""
+    for name, val in eqn.params.items():
+        if isinstance(val, (ClosedJaxpr, Jaxpr)):
+            yield name, _as_closed(val)
+        elif isinstance(val, (tuple, list)):
+            for i, item in enumerate(val):
+                if isinstance(item, (ClosedJaxpr, Jaxpr)):
+                    yield f"{name}[{i}]", _as_closed(item)
+
+
+def _eqn_label(eqn) -> str:
+    name = eqn.params.get("name")
+    prim = eqn.primitive.name
+    return f"{prim}:{name}" if isinstance(name, str) and name else prim
+
+
+def iter_eqns(closed: ClosedJaxpr, path: str = "", loop_depth: int = 0,
+              _depth: int = 0) -> Iterator[tuple]:
+    """Depth-first (eqn, path, loop_depth) over a jaxpr and every nested
+    sub-jaxpr.  `loop_depth` counts enclosing scan/while bodies — the
+    "runs many times per call" context the purity check cares about."""
+    if _depth > 64:
+        return
+    for eqn in closed.jaxpr.eqns:
+        yield eqn, path, loop_depth
+        inc = 1 if eqn.primitive.name in LOOP_PRIMITIVES else 0
+        for _pname, sub in sub_jaxprs(eqn):
+            # a while COND runs per iteration too; only skip loop credit
+            # for cond branches (each runs at most once per visit)
+            sub_inc = 0 if eqn.primitive.name == "cond" else inc
+            yield from iter_eqns(
+                sub, f"{path}/{_eqn_label(eqn)}", loop_depth + sub_inc,
+                _depth + 1)
+
+
+def eqn_location(eqn, path: str) -> str:
+    return f"{path}/{_eqn_label(eqn)}".lstrip("/")

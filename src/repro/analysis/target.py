@@ -1,0 +1,128 @@
+"""`AnalysisTarget` — one unit of code the static checks inspect.
+
+A target bundles a callable with the abstract arguments to trace it on,
+plus the *declared* intent the checks verify against reality:
+
+  donate_argnums — positions the author claims are donated (the donation
+                   check compares them with the compiled HLO's
+                   input_output_alias map);
+  hot_path       — this function runs per serving tick / per token, so
+                   callbacks and undonated state are findings, not style;
+  gemm_shapes    — (name, m, k, n) workload shapes for the Pallas
+                   preflight (a target may carry only shapes, no fn).
+
+Tracing is lazy and cached: `jaxpr()` costs one abstract trace,
+`compiled_text()` one XLA compile — only the checks that need them pay.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Sequence
+
+import jax
+import numpy as np
+
+# np dtype name -> HLO element type text, for comparing pytree leaves
+# against shapes parsed out of HLO.
+_HLO_DTYPE = {
+    "bool": "pred", "int4": "s4", "uint4": "u4",
+    "int8": "s8", "uint8": "u8", "int16": "s16", "uint16": "u16",
+    "int32": "s32", "uint32": "u32", "int64": "s64", "uint64": "u64",
+    "float16": "f16", "bfloat16": "bf16", "float32": "f32",
+    "float64": "f64", "complex64": "c64", "complex128": "c128",
+    "float8_e4m3fn": "f8e4m3fn", "float8_e5m2": "f8e5m2",
+    "float8_e8m0fnu": "f8e8m0fnu",
+}
+
+
+def hlo_shape_of(leaf) -> str:
+    """'f32[4,8]'-style text for an array / ShapeDtypeStruct leaf."""
+    dt = np.dtype(leaf.dtype).name
+    dims = ",".join(str(d) for d in leaf.shape)
+    return f"{_HLO_DTYPE.get(dt, dt)}[{dims}]"
+
+
+@dataclasses.dataclass
+class AnalysisTarget:
+    name: str
+    fn: Callable | None = None
+    example_args: tuple = ()
+    donate_argnums: tuple[int, ...] = ()
+    static_argnums: tuple[int, ...] = ()
+    hot_path: bool = False
+    gemm_shapes: tuple[tuple[str, int, int, int], ...] = ()
+    # (name, B, L, H, P, S) workloads for the ssd_scan preflight
+    ssd_shapes: tuple[tuple[str, int, int, int, int, int], ...] = ()
+
+    _jaxpr: Any = dataclasses.field(default=None, repr=False)
+    _compiled: str | None = dataclasses.field(default=None, repr=False)
+
+    def jaxpr(self):
+        """The closed jaxpr of fn(*example_args) (cached; abstract — no
+        FLOPs run)."""
+        if self._jaxpr is None:
+            if self.fn is None:
+                raise ValueError(f"target {self.name!r} has no callable")
+            self._jaxpr = jax.make_jaxpr(
+                self.fn, static_argnums=self.static_argnums)(
+                    *self.example_args)
+        return self._jaxpr
+
+    def try_jaxpr(self):
+        """`jaxpr()`, or None when the target cannot trace at all (e.g.
+        an unhashable static arg — the recompile check owns reporting
+        that; the other jaxpr checks silently skip)."""
+        try:
+            return self.jaxpr()
+        except (TypeError, ValueError):
+            return None
+
+    def compiled_text(self) -> str:
+        """Optimized HLO of the jitted fn with the declared donations
+        (cached; one real XLA compile).  Pre-jitted fns lower directly —
+        their own donate/static settings are what gets compiled."""
+        if self._compiled is None:
+            if self.fn is None:
+                raise ValueError(f"target {self.name!r} has no callable")
+            fn = self.fn
+            if not hasattr(fn, "lower"):
+                fn = jax.jit(fn, donate_argnums=self.donate_argnums,
+                             static_argnums=self.static_argnums)
+            self._compiled = fn.lower(
+                *self.example_args).compile().as_text()
+        return self._compiled
+
+    def donated_leaf_shapes(self) -> list[str]:
+        """HLO shape text of every array leaf under the declared donated
+        argument positions — the buffers that MUST come back aliased."""
+        leaves: list[str] = []
+        for i in self.donate_argnums:
+            if i >= len(self.example_args):
+                continue
+            for leaf in jax.tree_util.tree_leaves(self.example_args[i]):
+                if hasattr(leaf, "shape") and hasattr(leaf, "dtype"):
+                    leaves.append(hlo_shape_of(leaf))
+        return leaves
+
+
+def consts_of(closed) -> list[tuple[Any, Any]]:
+    """(constvar, const_value) pairs of a ClosedJaxpr."""
+    return list(zip(closed.jaxpr.constvars, closed.consts))
+
+
+def program_target(program, example_args: Sequence[Any], *,
+                   name: str = "program") -> AnalysisTarget:
+    """Build the verification target for a `rosa.Program`.
+
+    The program's jitted entry is `run(key, variation, *args)`; an abstract
+    uint32[2] key (never a baked constant) exercises the noisy-realization
+    path, and the declared donations are the program's `donate_argnums`
+    shifted past the two prepended slots — exactly what `Program.__init__`
+    hands `jax.jit`."""
+    key_spec = jax.ShapeDtypeStruct((2,), np.uint32)
+    return AnalysisTarget(
+        name=name,
+        fn=program._call,
+        example_args=(key_spec, None, *tuple(example_args)),
+        donate_argnums=tuple(i + 2 for i in program._donate))

@@ -53,6 +53,43 @@ def osa_matmul(x: jax.Array, w: jax.Array, gains: jax.Array | None = None,
     return y * (scale / cfg.qmax)
 
 
+def preflight(m: int, k: int, n: int, *, bm: int = 128, bn: int = 128,
+              bk: int = 128, n_planes: int = 7) -> dict:
+    """Static tileability/VMEM report for an (m, k, n) GEMM — no launch.
+
+    Mirrors exactly what `osa_matmul` would do with the shape: pad every
+    dimension up to its block multiple, run a (m/bm, n/bn) grid with a
+    k-step inner loop, and hold x/w blocks plus an f32 accumulator scratch
+    in VMEM (in/out blocks double-buffered by the pipeline).  `issues`
+    lists hard contract violations (block shapes the MXU tiling cannot
+    accept); padding itself is legal but wasteful — `pad_waste` is the
+    fraction of extra MACs the padding buys."""
+    issues: list[str] = []
+    if min(m, k, n) <= 0 or min(bm, bn, bk) <= 0:
+        issues.append(f"non-positive dimension in m,k,n={m},{k},{n} "
+                      f"bm,bn,bk={bm},{bn},{bk}")
+        return {"kernel": "osa_matmul", "grid": (0, 0, 0), "vmem_bytes": 0,
+                "pad_waste": 0.0, "issues": issues}
+    # f32 min tile is (8, 128): sublane dims % 8, lane dims % 128
+    if bm % 8:
+        issues.append(f"bm={bm} not a multiple of 8 (f32 sublane tile)")
+    if bk % 128:
+        issues.append(f"bk={bk} not a multiple of 128 (x-block lane dim)")
+    if bn % 128:
+        issues.append(f"bn={bn} not a multiple of 128 (w-block lane dim)")
+    mp = -(-m // bm) * bm
+    kp = -(-k // bk) * bk
+    np_ = -(-n // bn) * bn
+    grid = (mp // bm, np_ // bn, kp // bk)
+    vmem = 4 * (2 * (bm * bk + bk * bn)      # double-buffered in blocks
+                + 2 * bm * bn                # double-buffered out block
+                + bm * bn                    # accumulator scratch
+                + n_planes)                  # plane gains
+    pad_waste = (mp * kp * np_) / (m * k * n) - 1.0
+    return {"kernel": "osa_matmul", "grid": grid, "vmem_bytes": vmem,
+            "pad_waste": pad_waste, "issues": issues}
+
+
 def osa_matmul_int(q: jax.Array, w: jax.Array, gains: jax.Array,
                    *, n_planes: int, fused: bool = True,
                    bm: int = 128, bn: int = 128, bk: int = 128) -> jax.Array:

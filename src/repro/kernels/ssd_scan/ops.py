@@ -16,6 +16,39 @@ import jax.numpy as jnp
 from repro.kernels.ssd_scan.ssd_scan import ssd_scan_pallas
 
 
+def preflight(bsz: int, l: int, h: int, p: int, s_dim: int, *,
+              chunk: int = 128) -> dict:
+    """Static tileability/VMEM report for an SSD scan — no launch.
+
+    Mirrors `ssd_scan`'s layout: (B, H) folds to BH rows, L pads to the
+    chunk multiple with identity steps, and each grid step holds one
+    chunk of x/loga/b/c plus the running (S, P) state scratch in VMEM."""
+    issues: list[str] = []
+    soft: list[str] = []
+    if min(bsz, l, h, p, s_dim, chunk) <= 0:
+        issues.append(f"non-positive dimension in B,L,H,P,S,chunk="
+                      f"{bsz},{l},{h},{p},{s_dim},{chunk}")
+        return {"kernel": "ssd_scan", "grid": (0, 0), "vmem_bytes": 0,
+                "pad_waste": 0.0, "issues": issues, "soft_issues": soft}
+    # P/S are lane dims the compiler CAN pad to 128 — legal, but any
+    # shortfall idles lanes on every matmul, so they are soft issues.
+    if p % 128:
+        soft.append(f"P={p} not a multiple of 128 (lane dim of x/y): "
+                    "lanes idle on every chunk matmul")
+    if s_dim % 128:
+        soft.append(f"S={s_dim} not a multiple of 128 (lane dim of b/c): "
+                    "lanes idle on every chunk matmul")
+    if chunk % 8:
+        issues.append(f"chunk={chunk} not a multiple of 8 (sublane tile)")
+    lp = -(-l // chunk) * chunk
+    vmem = 4 * (2 * (chunk * p + chunk + 2 * chunk * s_dim)  # in blocks
+                + 2 * chunk * p                              # out block
+                + s_dim * p)                                 # state scratch
+    return {"kernel": "ssd_scan", "grid": (bsz * h, lp // chunk),
+            "vmem_bytes": vmem, "pad_waste": lp / l - 1.0,
+            "issues": issues, "soft_issues": soft}
+
+
 @functools.partial(jax.jit, static_argnames=("chunk",))
 def ssd_scan(x: jax.Array, loga: jax.Array, b: jax.Array, c: jax.Array,
              chunk: int = 128):

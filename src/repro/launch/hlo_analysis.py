@@ -1,384 +1,23 @@
-"""Optimized-HLO analyzer: FLOPs, HBM traffic, collective bytes.
+"""Optimized-HLO analyzer — thin façade over `repro.analysis.hlo`.
 
-Why this exists: `compiled.cost_analysis()` visits a while-loop body ONCE,
-so for scan-over-layers models it reports ~1/L of the real FLOPs (verified
-empirically — see EXPERIMENTS.md §Dry-run).  This module parses the
-optimized per-device HLO text instead:
-
-  1. split into computations; build a per-computation SYMBOL TABLE
-     (operands are printed without shapes in scheduled HLO, so shapes are
-     resolved from each value's defining line / the computation header);
-  2. walk the call graph from ENTRY; while bodies multiply by the trip
-     count XLA records in backend_config known_trip_count (fallback:
-     largest s32 constant in the loop condition);
-  3. accumulate per device:
-       flops       — 2 * out_elems * K for every dot (K = contracting dims
-                     of the lhs, batch dims excluded by construction);
-       bytes       — operands + outputs of every top-level op except pure
-                     bookkeeping (tuple/gte/parameter/bitcast/while/call —
-                     fusion bodies are skipped for bytes: internals never
-                     touch HBM; their dots still count flops);
-       collectives — per kind, both conventions:
-           operand_bytes: sum of operand sizes (assignment's definition)
-           wire_bytes   : link traffic per device (all-gather: out-in;
-                          reduce-scatter: in-out; all-reduce: 2*in;
-                          permute / all-to-all: in).
-
-Shapes in a GSPMD-partitioned module are per-device => per-device numbers.
+The parser grew a second consumer (the static verifier's donation check
+reads the same module text for `input_output_alias`), so the machinery
+moved to `repro.analysis.hlo`; this module keeps the historical import
+path for the dry-run pipeline (`launch/dryrun.py`) and external callers.
+See `repro.analysis.hlo` for the full methodology notes (why
+`compiled.cost_analysis()` undercounts scanned loops, byte-accounting
+conventions, collective wire math).
 """
 
 from __future__ import annotations
 
-import dataclasses
-import math
-import re
-from collections import defaultdict
+from repro.analysis.hlo import (  # noqa: F401
+    COLLECTIVES, DTYPE_BYTES, Comp, HLOReport, UnknownDtypeError,
+    _DTYPE_BYTES, _multiplicities, _operand_names, _shape_dims,
+    _shape_list_bytes, _split, _sym_bytes, analyze,
+    entry_parameter_shapes, parse_input_output_aliases, top_bytes,
+)
 
-_DTYPE_BYTES = {
-    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1,
-    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
-    "s32": 4, "u32": 4, "f32": 4,
-    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
-}
-
-_SHAPE_RE = re.compile(r"\b([a-z][a-z0-9]{1,8})\[([0-9,]*)\]")
-_OPNAME_RE = re.compile(r"[\s)]([a-z][a-z0-9\-]*)\(")
-_TRIP_RE = re.compile(r'known_trip_count[^0-9]*(\d+)')
-_CONST_INT = re.compile(r"\bs32\[\]\s+constant\((\d+)\)")
-_HDR_PARAM = re.compile(r"([\w\.\-]+):\s*((?:\([^)]*\))|(?:[a-z][a-z0-9]*\[[0-9,]*\](?:\{[0-9,]*\})?))")
-
-COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
-               "collective-permute")
-_SKIP_BYTES_OPS = {"parameter", "tuple", "get-tuple-element", "constant",
-                   "bitcast", "after-all", "while", "conditional", "call",
-                   "iota", "partition-id", "replica-id"}
-
-
-def _shape_list_bytes(text: str) -> int:
-    total = 0
-    for dt, dims in _SHAPE_RE.findall(text):
-        if dt not in _DTYPE_BYTES:
-            continue
-        n = 1
-        if dims:
-            for d in dims.split(","):
-                n *= int(d)
-        total += n * _DTYPE_BYTES[dt]
-    return total
-
-
-def _shape_dims(text: str) -> list[int] | None:
-    m = _SHAPE_RE.search(text)
-    if not m:
-        return None
-    return [int(d) for d in m.group(2).split(",")] if m.group(2) else []
-
-
-@dataclasses.dataclass
-class Comp:
-    name: str
-    is_entry: bool = False
-    lines: list = dataclasses.field(default_factory=list)
-    symbols: dict = dataclasses.field(default_factory=dict)  # name -> shape str
-    max_const: int = 0
-
-
-def _split(hlo: str) -> dict[str, Comp]:
-    comps: dict[str, Comp] = {}
-    cur: Comp | None = None
-    for line in hlo.splitlines():
-        ls = line.rstrip()
-        st = ls.strip()
-        if st.endswith("{") and "->" in st and ("(" in st):
-            is_entry = st.startswith("ENTRY")
-            name_m = re.match(r"(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(", st)
-            if name_m:
-                cur = Comp(name_m.group(1), is_entry)
-                comps[cur.name] = cur
-                # header params: "name: shape"
-                for pn, psh in _HDR_PARAM.findall(st):
-                    cur.symbols[pn] = psh
-                continue
-        if st == "}" or st.startswith("}"):
-            cur = None
-            continue
-        if cur is not None and st:
-            cur.lines.append(st)
-            if "=" in st:
-                lhs, rhs = st.split("=", 1)
-                vname = lhs.strip().lstrip("%").strip()
-                # defining shape = first shape (or tuple) on the rhs
-                mtup = re.match(r"\s*(\([^=]*?\))\s+[a-z]", rhs)
-                if mtup:
-                    cur.symbols[vname] = mtup.group(1)
-                else:
-                    msh = _SHAPE_RE.search(rhs)
-                    if msh:
-                        cur.symbols[vname] = msh.group(0)
-            for m in _CONST_INT.finditer(st):
-                cur.max_const = max(cur.max_const, int(m.group(1)))
-    return comps
-
-
-def _operand_names(rhs: str, op: str) -> list[str]:
-    m = re.search(re.escape(op) + r"\(([^)]*)\)", rhs)
-    if not m:
-        return []
-    # Operands may print bare ("%a, %b") or with inline shapes
-    # ("f32[64,128]{1,0} %a, ..." — older jax); shape dims contain commas,
-    # so extract the %names directly instead of comma-splitting.
-    return re.findall(r"%([\w\.\-]+)", m.group(1))
-
-
-def _sym_bytes(comp: Comp, names: list[str]) -> int:
-    return sum(_shape_list_bytes(comp.symbols.get(n, "")) for n in names)
-
-
-@dataclasses.dataclass
-class HLOReport:
-    flops: float
-    bytes: float
-    coll_operand: dict[str, float]
-    coll_wire: dict[str, float]
-    loop_counts: dict[str, int]
-    dot_count: int = 0
-
-    @property
-    def collective_operand_total(self) -> float:
-        return sum(self.coll_operand.values())
-
-    @property
-    def collective_wire_total(self) -> float:
-        return sum(self.coll_wire.values())
-
-    def as_dict(self) -> dict:
-        return {"flops": self.flops, "bytes": self.bytes,
-                "dot_count": self.dot_count,
-                "coll_operand": dict(self.coll_operand),
-                "coll_wire": dict(self.coll_wire),
-                "coll_operand_total": self.collective_operand_total,
-                "coll_wire_total": self.collective_wire_total,
-                "loops": self.loop_counts}
-
-
-def top_bytes(hlo_text: str, n: int = 20) -> list[tuple[float, str, str]]:
-    """Largest HBM-traffic ops (bytes*multiplicity, op, line) — the profile
-    view the §Perf hillclimb reads instead of a wall-clock trace."""
-    comps = _split(hlo_text)
-    rep_mult, fusion_bodies = _multiplicities(comps)
-    tops = []
-    for name, m in rep_mult.items():
-        if name in fusion_bodies:
-            continue
-        c = comps[name]
-        for ln in c.lines:
-            if "=" not in ln:
-                continue
-            rhs = ln.split("=", 1)[1]
-            opm = _OPNAME_RE.search(" " + rhs)
-            op = opm.group(1) if opm else ""
-            if not op or op in _SKIP_BYTES_OPS or op.endswith("-done"):
-                continue
-            out_b = _shape_list_bytes(rhs.split(op + "(")[0])
-            in_b = _sym_bytes(c, _operand_names(rhs, op))
-            tops.append(((out_b + in_b) * m, op, ln[:140]))
-    tops.sort(key=lambda t: -t[0])
-    return tops[:n]
-
-
-def _multiplicities(comps) -> tuple[dict, set]:
-    fusion_bodies: set[str] = set()
-    for c in comps.values():
-        for ln in c.lines:
-            if " fusion(" in ln:
-                m = re.search(r"calls=%?([\w\.\-]+)", ln)
-                if m:
-                    fusion_bodies.add(m.group(1))
-    entry = next((c.name for c in comps.values() if c.is_entry), None)
-    mult: dict[str, float] = defaultdict(float)
-
-    def walk(name, m, depth=0):
-        if name not in comps or depth > 64 or m <= 0:
-            return
-        mult[name] += m
-        for ln in comps[name].lines:
-            rhs = ln.split("=", 1)[-1]
-            if "while(" in rhs:
-                tm = _TRIP_RE.search(rhs)
-                mc = re.search(r"condition=%?([\w\.\-]+)", rhs)
-                trips = int(tm.group(1)) if tm else (
-                    max(comps[mc.group(1)].max_const, 1)
-                    if mc and mc.group(1) in comps else 1)
-                mb = re.search(r"body=%?([\w\.\-]+)", rhs)
-                if mb:
-                    walk(mb.group(1), m * trips, depth + 1)
-                if mc:
-                    walk(mc.group(1), m * (trips + 1), depth + 1)
-                continue
-            for attr in ("calls", "to_apply"):
-                for cm in re.finditer(attr + r"=%?([\w\.\-]+)", rhs):
-                    walk(cm.group(1), m, depth + 1)
-            bm = re.search(r"branch_computations=\{([^}]*)\}", rhs)
-            if bm:
-                for b in bm.group(1).split(","):
-                    walk(b.strip().lstrip("%"), m, depth + 1)
-    walk(entry, 1.0)
-    return mult, fusion_bodies
-
-
-def analyze(hlo_text: str) -> HLOReport:
-    comps = _split(hlo_text)
-    entry = next((c.name for c in comps.values() if c.is_entry), None)
-    if entry is None and comps:
-        entry = list(comps)[-1]
-
-    # which computations are fusion bodies (bytes don't count there)
-    fusion_bodies: set[str] = set()
-    for c in comps.values():
-        for ln in c.lines:
-            if " fusion(" in ln or "fusion(" in ln.split("=", 1)[-1][:40]:
-                m = re.search(r"calls=%?([\w\.\-]+)", ln)
-                if m:
-                    fusion_bodies.add(m.group(1))
-
-    mult: dict[str, float] = defaultdict(float)
-    loop_counts: dict[str, int] = {}
-
-    def walk(name: str, m: float, depth: int = 0):
-        if name not in comps or depth > 64 or m <= 0:
-            return
-        mult[name] += m
-        c = comps[name]
-        for ln in c.lines:
-            rhs = ln.split("=", 1)[-1]
-            if "while(" in rhs:
-                trips = 1
-                tm = _TRIP_RE.search(rhs)
-                mc = re.search(r"condition=%?([\w\.\-]+)", rhs)
-                if tm:
-                    trips = int(tm.group(1))
-                elif mc and mc.group(1) in comps:
-                    trips = max(comps[mc.group(1)].max_const, 1)
-                mb = re.search(r"body=%?([\w\.\-]+)", rhs)
-                if mb:
-                    loop_counts[mb.group(1)] = trips
-                    walk(mb.group(1), m * trips, depth + 1)
-                if mc:
-                    walk(mc.group(1), m * (trips + 1), depth + 1)
-                continue
-            for attr in ("calls", "to_apply"):
-                for cm in re.finditer(attr + r"=%?([\w\.\-]+)", rhs):
-                    walk(cm.group(1), m, depth + 1)
-            bm = re.search(r"branch_computations=\{([^}]*)\}", rhs)
-            if bm:
-                for b in bm.group(1).split(","):
-                    walk(b.strip().lstrip("%"), m, depth + 1)
-            cm2 = re.search(r"called_computations=\{([^}]*)\}", rhs)
-            if cm2:
-                for b in cm2.group(1).split(","):
-                    if b.strip():
-                        walk(b.strip().lstrip("%"), m, depth + 1)
-
-    walk(entry, 1.0)
-
-    flops = bytes_ = 0.0
-    dot_count = 0
-    coll_o: dict[str, float] = defaultdict(float)
-    coll_w: dict[str, float] = defaultdict(float)
-
-    for name, m in mult.items():
-        c = comps[name]
-        in_fusion = name in fusion_bodies
-        # XLA:CPU legalizes bf16 arithmetic as convert->f32 op->convert;
-        # on TPU those ops are native-bf16.  Track which f32 values are
-        # just widened bf16 so their bytes can be counted at bf16 width
-        # ("TPU-adjusted" memory accounting, EXPERIMENTS.md §Roofline).
-        widened: set[str] = set()      # f32 values converted from/to bf16
-        for ln in c.lines:
-            if "=" not in ln or " convert(" not in ln:
-                continue
-            lhs, rhs = ln.split("=", 1)
-            out_name = lhs.strip().lstrip("%")
-            out_sh = _SHAPE_RE.search(rhs)
-            ops_ = _operand_names(rhs, "convert")
-            if not out_sh or not ops_:
-                continue
-            src_sh = c.symbols.get(ops_[0], "")
-            if out_sh.group(1) == "f32" and src_sh.startswith("bf16"):
-                widened.add(out_name)          # f32 copy of a bf16 value
-            if out_sh.group(1) == "bf16" and src_sh.startswith("f32"):
-                widened.add(ops_[0])           # f32 value narrowed away
-
-        def _tensor_bytes(name_or_shape: str, is_name: bool) -> float:
-            sh = c.symbols.get(name_or_shape, "") if is_name \
-                else name_or_shape
-            b = _shape_list_bytes(sh)
-            if is_name and name_or_shape in widened:
-                b *= 0.5
-            return b
-
-        for ln in c.lines:
-            if "=" not in ln:
-                continue
-            rhs = ln.split("=", 1)[1]
-            opm = _OPNAME_RE.search(" " + rhs)
-            op = opm.group(1) if opm else ""
-            if not op:
-                continue
-
-            if op == "dot":
-                out_dims = _shape_dims(rhs) or []
-                out_elems = math.prod(out_dims) if out_dims else 1
-                ops = _operand_names(rhs, "dot")
-                k = 1
-                if ops:
-                    lhs_dims = _shape_dims(c.symbols.get(ops[0], "")) or []
-                    mc = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", rhs)
-                    if mc and lhs_dims:
-                        for idx in mc.group(1).split(","):
-                            if idx and int(idx) < len(lhs_dims):
-                                k *= lhs_dims[int(idx)]
-                flops += 2.0 * out_elems * k * m
-                dot_count += 1
-
-            base = op.replace("-start", "")
-            if base in COLLECTIVES and not op.endswith("-done"):
-                lhs_name = ln.split("=", 1)[0].strip().lstrip("%")
-                out_b = _tensor_bytes(lhs_name, True) \
-                    if lhs_name in c.symbols \
-                    else _shape_list_bytes(rhs.split(base + "(")[0])
-                in_b = sum(_tensor_bytes(n, True)
-                           for n in _operand_names(rhs, op))
-                if in_b == 0:
-                    in_b = out_b   # conservative fallback
-                coll_o[base] += in_b * m
-                if base == "all-gather":
-                    wire = max(out_b - in_b, 0)
-                elif base == "reduce-scatter":
-                    wire = max(in_b - out_b, 0)
-                elif base == "all-reduce":
-                    wire = 2.0 * in_b
-                else:
-                    wire = in_b
-                coll_w[base] += wire * m
-
-            if not in_fusion and op not in _SKIP_BYTES_OPS \
-                    and op != "convert" and not op.endswith("-done"):
-                lhs_name = ln.split("=", 1)[0].strip().lstrip("%")
-                out_b = _tensor_bytes(lhs_name, True) \
-                    if lhs_name in c.symbols \
-                    else _shape_list_bytes(rhs.split(op + "(")[0])
-                in_b = sum(_tensor_bytes(n, True)
-                           for n in _operand_names(rhs, op))
-                total = out_b + in_b
-                if "dynamic-update-slice" in ln:
-                    # in-place slice update: the big buffer is aliased
-                    # (donated scan carry / KV cache) — real traffic is the
-                    # update slice, not buffer read + write
-                    big = max([out_b] + [_tensor_bytes(n, True)
-                                         for n in _operand_names(rhs, op)])
-                    total = max(total - 2 * big, 0.0)
-                bytes_ += total * m
-
-    return HLOReport(flops, bytes_, dict(coll_o), dict(coll_w), loop_counts,
-                     dot_count)
+__all__ = ["COLLECTIVES", "DTYPE_BYTES", "HLOReport", "UnknownDtypeError",
+           "analyze", "top_bytes", "parse_input_output_aliases",
+           "entry_parameter_shapes"]

@@ -57,6 +57,8 @@ def main() -> None:
     ap.add_argument("--data-axis", type=int, default=0,
                     help="data-parallel ways (0 = all devices)")
     ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--seed", type=int, default=0,
+                    help="base PRNG seed for init and data")
     args = ap.parse_args()
 
     cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
@@ -75,14 +77,14 @@ def main() -> None:
     dp = args.data_axis or n_dev
     mesh = make_test_mesh(data=dp, model=n_dev // dp) if n_dev > 1 else None
 
-    key = jax.random.PRNGKey(0)
+    key = jax.random.PRNGKey(args.seed)
     opt_cfg = AdamWConfig(lr=cosine_schedule(args.lr, args.warmup,
                                              args.steps))
     step_fn = make_train_step(bundle, opt_cfg,
                               grad_compress=args.compress_grads)
 
     pipe = TokenPipeline(vocab=cfg.vocab, seq_len=args.seq,
-                         global_batch=args.batch)
+                         global_batch=args.batch, seed=args.seed)
     shape = ShapeSpec("cli", "train", args.seq, args.batch)
 
     ckpt = CheckpointManager(args.ckpt_dir, every=args.ckpt_every, keep=3)

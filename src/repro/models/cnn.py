@@ -162,23 +162,28 @@ RESNET18_SKIPS = {"l1_b1_c2": "conv1", "l1_b2_c2": "l1_b1_c2",
                   "l3_b2_c2": "l3_b1_c2", "l4_b2_c2": "l4_b1_c2"}
 RESNET18_SKIPS = {k: v for k, v in RESNET18_SKIPS.items() if v}
 
-MOBILENET_V3_LITE = (
-    [ConvSpec("conv_stem", "conv", 3, 16, pool=2)]
-    + [ConvSpec("mb1_exp", "conv", 16, 16, k=1),
-       ConvSpec("mb1_dw", "dwconv", 16, 16),
-       ConvSpec("mb1_prj", "conv", 16, 16, k=1, act=False)]
-    + [ConvSpec("mb2_exp", "conv", 16, 36, k=1),
-       ConvSpec("mb2_dw", "dwconv", 36, 36, pool=2),
-       ConvSpec("mb2_prj", "conv", 36, 24, k=1, act=False)]
-    + [ConvSpec("mb4_exp", "conv", 24, 48, k=1),
-       ConvSpec("mb4_dw", "dwconv", 48, 48, k=5, pool=2),
-       ConvSpec("mb4_prj", "conv", 48, 40, k=1, act=False)]
-    + [ConvSpec("mb6_exp", "conv", 40, 60, k=1),
-       ConvSpec("mb6_dw", "dwconv", 60, 60, k=5),
-       ConvSpec("mb6_prj", "conv", 60, 48, k=1, act=False)]
-    + [ConvSpec("head", "fc", 48, 96), ConvSpec("fc", "fc", 96, 10,
-                                                act=False)]
-)
+MOBILENET_V3_LITE = [
+    ConvSpec("conv_stem", "conv", 3, 16, pool=2),
+    # mb1
+    ConvSpec("mb1_exp", "conv", 16, 16, k=1),
+    ConvSpec("mb1_dw", "dwconv", 16, 16),
+    ConvSpec("mb1_prj", "conv", 16, 16, k=1, act=False),
+    # mb2
+    ConvSpec("mb2_exp", "conv", 16, 36, k=1),
+    ConvSpec("mb2_dw", "dwconv", 36, 36, pool=2),
+    ConvSpec("mb2_prj", "conv", 36, 24, k=1, act=False),
+    # mb4
+    ConvSpec("mb4_exp", "conv", 24, 48, k=1),
+    ConvSpec("mb4_dw", "dwconv", 48, 48, k=5, pool=2),
+    ConvSpec("mb4_prj", "conv", 48, 40, k=1, act=False),
+    # mb6
+    ConvSpec("mb6_exp", "conv", 40, 60, k=1),
+    ConvSpec("mb6_dw", "dwconv", 60, 60, k=5),
+    ConvSpec("mb6_prj", "conv", 60, 48, k=1, act=False),
+    # head
+    ConvSpec("head", "fc", 48, 96),
+    ConvSpec("fc", "fc", 96, 10, act=False),
+]
 
 LITE_MODELS: dict[str, list[ConvSpec]] = {
     "alexnet": ALEXNET_LITE,

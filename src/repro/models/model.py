@@ -123,10 +123,17 @@ def make_inputs(cfg: ModelConfig, shape: ShapeSpec, concrete: bool = False,
     b, s = shape.global_batch, shape.seq_len
     tok_dt, emb_dt = jnp.int32, jnp.bfloat16
 
+    base_key = key if key is not None else jax.random.PRNGKey(0)
+    n_drawn = 0
+
     def arr(shp, dt, maxval=None):
         if not concrete:
             return jax.ShapeDtypeStruct(shp, dt)
-        k = key if key is not None else jax.random.PRNGKey(0)
+        # fold a per-field counter so no two fields share a stream
+        # (tokens == labels correlation broke the loss fixture's entropy)
+        nonlocal n_drawn
+        k = jax.random.fold_in(base_key, n_drawn)
+        n_drawn += 1
         if dt == jnp.int32:
             return jax.random.randint(k, shp, 0, maxval or cfg.vocab,
                                       dtype=dt)

@@ -105,6 +105,11 @@ def stack_defs(skel, n: int):
         skel, is_leaf=lambda x: isinstance(x, ParamDef))
 
 
+def layer_at(tree, i):
+    """Leaf-wise `tree[i]`: one layer's params/cache out of a stacked tree."""
+    return jax.tree.map(lambda a, idx=i: a[idx], tree)
+
+
 # ---------------------------------------------------------------------------
 # Per-layer meta arrays (window / rope theta patterns)
 # ---------------------------------------------------------------------------
@@ -422,7 +427,7 @@ def _hybrid_fwd(params, cfg: ModelConfig, x, positions):
 
     def group_body(carry, p_g):
         for i in range(cfg.shared_every):
-            p_l = jax.tree.map(lambda a: a[i], p_g)
+            p_l = layer_at(p_g, i)
             carry = carry + SSM.ssm_apply(
                 p_l["ssm"], cfg.ssm, L.rmsnorm(p_l["ln1"], carry,
                                                cfg.norm_eps))
@@ -432,7 +437,7 @@ def _hybrid_fwd(params, cfg: ModelConfig, x, positions):
     if "tail" in params:
         rem = params["tail"]["ln1"].shape[0]
         for i in range(rem):
-            p_l = jax.tree.map(lambda a: a[i], params["tail"])
+            p_l = layer_at(params["tail"], i)
             x = x + SSM.ssm_apply(p_l["ssm"], cfg.ssm,
                                   L.rmsnorm(p_l["ln1"], x, cfg.norm_eps))
     return x
@@ -521,7 +526,7 @@ def _hybrid_prefill(params, cfg: ModelConfig, x, positions):
     def group_body(carry, p_g):
         ssm_caches = []
         for i in range(cfg.shared_every):
-            p_l = jax.tree.map(lambda a: a[i], p_g)
+            p_l = layer_at(p_g, i)
             y, c = _ssm_prefill(p_l["ssm"], cfg.ssm,
                                 L.rmsnorm(p_l["ln1"], carry, cfg.norm_eps))
             carry = carry + y
@@ -542,7 +547,7 @@ def _hybrid_prefill(params, cfg: ModelConfig, x, positions):
         tails = []
         rem = params["tail"]["ln1"].shape[0]
         for i in range(rem):
-            p_l = jax.tree.map(lambda a: a[i], params["tail"])
+            p_l = layer_at(params["tail"], i)
             y, c = _ssm_prefill(p_l["ssm"], cfg.ssm,
                                 L.rmsnorm(p_l["ln1"], x, cfg.norm_eps))
             x = x + y
@@ -675,8 +680,8 @@ def _hybrid_decode(params, cfg: ModelConfig, x, pos, cache):
         p_g, c_g = xs
         ssm_new = []
         for i in range(cfg.shared_every):
-            p_l = jax.tree.map(lambda a: a[i], p_g)
-            c_l = jax.tree.map(lambda a: a[i], c_g["ssm"])
+            p_l = layer_at(p_g, i)
+            c_l = layer_at(c_g["ssm"], i)
             h = L.rmsnorm(p_l["ln1"], carry, cfg.norm_eps)
             y, c_l = SSM.ssm_decode(p_l["ssm"], cfg.ssm, h, c_l)
             carry = carry + y
@@ -696,8 +701,8 @@ def _hybrid_decode(params, cfg: ModelConfig, x, pos, cache):
         rem = params["tail"]["ln1"].shape[0]
         tails = []
         for i in range(rem):
-            p_l = jax.tree.map(lambda a: a[i], params["tail"])
-            c_l = jax.tree.map(lambda a: a[i], cache["tail"])
+            p_l = layer_at(params["tail"], i)
+            c_l = layer_at(cache["tail"], i)
             h = L.rmsnorm(p_l["ln1"], x, cfg.norm_eps)
             y, c_l = SSM.ssm_decode(p_l["ssm"], cfg.ssm, h, c_l)
             x = x + y

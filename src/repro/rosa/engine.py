@@ -15,10 +15,14 @@ on each layer's `RosaConfig.backend` and resolves through the registry in
 
 Usage:
 
+    key = jax.random.split(caller_key)[0]        # thread, never re-seed:
     engine = Engine.from_hybrid_plan(RosaConfig(noise=mrr.PAPER_NOISE),
-                                     {"conv3": Mapping.IS},
-                                     key=jax.random.PRNGKey(0))
+                                     {"conv3": Mapping.IS}, key=key)
     y = engine.matmul(x, w, name="conv3")        # folded key, plan config
+
+A constant-baked key (`key=jax.random.PRNGKey(0)` at a call site) makes
+every run realize the same device noise — `repro.analysis`'s PRNG check
+flags exactly that pattern (PRNG002/PRNG003).
 """
 
 from __future__ import annotations

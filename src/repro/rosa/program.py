@@ -377,7 +377,8 @@ def compile(apply_fn: ApplyFn, engine: Engine,
             autotune: AutotuneConfig | None = None,
             degradation: dict | None = None,
             cache: "PlanCache | str | os.PathLike | None | bool" = None,
-            donate_argnums: Sequence[int] = ()) -> Program:
+            donate_argnums: Sequence[int] = (),
+            verify: str = "off") -> Program:
     """Compile `apply_fn` against `engine` into a frozen `Program`.
 
     `example_args` are arrays or `jax.ShapeDtypeStruct`s matching
@@ -393,7 +394,18 @@ def compile(apply_fn: ApplyFn, engine: Engine,
     default directory when None, a directory path, a `PlanCache`, or
     ``False`` to disable) — a warm compile with identical trace + config +
     settings loads the plan from disk and skips the search.
+
+    ``verify`` runs the `repro.analysis` static checks (PRNG discipline,
+    donation aliasing, recompile hazards, hot-loop purity) over the
+    compiled program: ``"error"`` raises `analysis.VerificationError` on
+    ERROR-severity findings, ``"warn"`` emits a warning per finding,
+    ``"off"`` (default) skips the pass.  Verification re-traces the
+    program with an abstract key and — when donations are declared —
+    pays one real XLA compile to read the alias map.
     """
+    if verify not in ("off", "warn", "error"):
+        raise ValueError(
+            f"verify must be 'off'|'warn'|'error', got {verify!r}")
     example_args = tuple(example_args)
     trace = capture_trace(apply_fn, engine, example_args)
 
@@ -452,6 +464,20 @@ def compile(apply_fn: ApplyFn, engine: Engine,
             jax.eval_shape(functools.partial(apply_fn, final),
                            *example_args)
 
-    return Program(apply_fn, engine, trace, donate_argnums=donate_argnums,
-                   searched=searched, cache_hit=cache_hit,
-                   cache_key=cache_key)
+    program = Program(apply_fn, engine, trace,
+                      donate_argnums=donate_argnums, searched=searched,
+                      cache_hit=cache_hit, cache_key=cache_key)
+
+    if verify != "off":
+        # lazy import: rosa must stay importable without the analysis
+        # package, and analysis imports rosa types for its CLI targets
+        from repro import analysis as A
+        report = A.verify_program(program, example_args)
+        if verify == "error" and report.errors:
+            raise A.VerificationError(report)
+        if report.findings:
+            import warnings
+            for f in report.findings:
+                warnings.warn(f"rosa.compile verification: {f}",
+                              stacklevel=2)
+    return program

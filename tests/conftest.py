@@ -18,3 +18,28 @@ def _hermetic_plan_cache(tmp_path_factory, monkeypatch):
     monkeypatch.setenv(
         "ROSA_PLAN_CACHE",
         str(tmp_path_factory.getbasetemp() / "rosa-plan-cache"))
+
+
+# ---------------------------------------------------------------------------
+# Opt-in NaN/Inf guard for the analog numerics path
+# ---------------------------------------------------------------------------
+def pytest_addoption(parser):
+    parser.addoption(
+        "--nan-guard", action="store_true", default=False,
+        help="run @analog_guard tests under jax_debug_nans/jax_debug_infs "
+             "(any NaN/Inf in the analog path raises at the producing op)")
+
+
+@pytest.fixture(autouse=True)
+def _nan_guard(request):
+    """For tests marked `analog_guard` under --nan-guard: every op that
+    produces a NaN or Inf raises immediately, turning a silent numerics
+    regression in the MRR transfer / OSA accumulation path into a
+    pinpointed failure.  Off by default — the debug checks force re-traces
+    and would slow the whole suite."""
+    if request.node.get_closest_marker("analog_guard") is None \
+            or not request.config.getoption("--nan-guard"):
+        yield
+        return
+    with jax.debug_nans(True), jax.debug_infs(True):
+        yield

@@ -237,6 +237,6 @@ def test_legacy_shims_removed():
         importlib.import_module("repro.core.onn_linear")
     module = importlib.import_module("repro.models.module")
     with pytest.raises(ImportError, match="rosa.compile"):
-        getattr(module, "MatmulBackend")
+        _ = module.MatmulBackend
     with pytest.raises(ImportError, match="rosa"):
-        getattr(module, "DENSE")
+        _ = module.DENSE

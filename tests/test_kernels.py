@@ -31,6 +31,7 @@ from repro.kernels.ssd_scan import ref as ssd_ref
 @pytest.mark.parametrize("m,k,n", [(8, 16, 8), (32, 48, 24), (17, 33, 5),
                                    (128, 128, 128)])
 @pytest.mark.parametrize("bits", [4, 8])
+@pytest.mark.analog_guard
 def test_osa_kernel_matches_ref(m, k, n, bits, key):
     k1, k2 = jax.random.split(key)
     cfg = quant.QuantConfig(bits=bits)
@@ -68,6 +69,7 @@ def test_osa_kernel_nonideal_gains(key):
                                rtol=1e-4, atol=1e-3)
 
 
+@pytest.mark.analog_guard
 def test_osa_float_entrypoint(key):
     k1, k2 = jax.random.split(key)
     x = jax.random.normal(k1, (9, 21))

@@ -34,11 +34,13 @@ def test_fig5b_max_shift_calibration():
     assert abs(float(d3 - d1) - 0.740) < 1e-3
 
 
+@pytest.mark.analog_guard
 def test_transfer_curve_monotone_decreasing():
     v, w = mrr.transfer_curve(128)
     assert np.all(np.diff(np.asarray(w)) < 0)   # more V -> more detuned -> lower w
 
 
+@pytest.mark.analog_guard
 def test_roundtrip_identity_ideal():
     w = jnp.linspace(-1.0, 1.0, 41)
     w2 = mrr.realize_weights(w)

@@ -11,6 +11,7 @@ from repro.core import mrr
 from repro.core.constants import ComputeMode, Mapping
 
 
+@pytest.mark.analog_guard
 def test_eq2_equivalence_ideal(key):
     """Ideal OSA == fake-quant matmul (Eq. 1 == Eq. 2)."""
     k1, k2 = jax.random.split(key)
@@ -22,6 +23,7 @@ def test_eq2_equivalence_ideal(key):
                                rtol=1e-4, atol=1e-4)
 
 
+@pytest.mark.analog_guard
 def test_pam_equivalence(key):
     k1, k2 = jax.random.split(key)
     x = jax.random.normal(k1, (8, 16))
@@ -57,6 +59,7 @@ def test_slot_counts():
     assert osa.required_slot_count(quant.Q8, 3) == 3
 
 
+@pytest.mark.analog_guard
 def test_rosa_matmul_shortcut_equals_plane_path(key):
     """The ideal-mixed fast path must equal the explicit OSA pipeline."""
     k1, k2 = jax.random.split(key)

@@ -325,3 +325,54 @@ def test_deprecated_wrappers_warn_and_delegate():
         with pytest.warns(DeprecationWarning, match="current_engine"):
             assert rosa.current_engine() is eng
     assert rosa.ambient_engine() is None
+
+
+# ---------------------------------------------------------------------------
+# Donation canaries: declared donations survive into compiled HLO
+# ---------------------------------------------------------------------------
+def test_program_donation_canary(key):
+    """Pin: a Program compiled with donate_argnums aliases the donated
+    buffer in its optimized HLO (checked against the real alias map, not
+    the declaration)."""
+    from repro.analysis import program_target, run_checks
+    from repro.analysis.hlo import (entry_parameter_shapes,
+                                    parse_input_output_aliases)
+
+    eng = rosa.Engine.from_config(NOISY)
+
+    def f(e, x, w, state):
+        return state + e.matmul(x, w, name="a")
+
+    sds = jax.ShapeDtypeStruct
+    ex = (sds((4, 16), jnp.float32), sds((16, 16), jnp.float32),
+          sds((4, 16), jnp.float32))
+    prog = rosa.compile(f, eng, ex, donate_argnums=(2,), cache=False)
+
+    t = program_target(prog, ex, name="canary:program")
+    assert list(run_checks([t], checks=["donation"])) == []
+
+    txt = prog._call.lower(sds((2,), jnp.uint32), None,
+                           *ex).compile().as_text()
+    aliases = parse_input_output_aliases(txt)
+    params = entry_parameter_shapes(txt)
+    aliased = [params.get(p, "").split("{")[0] for p, _ in aliases]
+    assert "f32[4,16]" in aliased, (aliases, params)
+
+
+def test_program_verify_catches_dropped_donation(key):
+    """Negative control: donating an arg the program never touches must
+    surface as DON001 through verify="error"."""
+    from repro import analysis as A
+
+    eng = rosa.Engine.from_config(NOISY)
+
+    def f(e, x, w, scratch):
+        return e.matmul(x, w, name="a")
+
+    sds = jax.ShapeDtypeStruct
+    ex = (sds((4, 16), jnp.float32), sds((16, 16), jnp.float32),
+          sds((4, 16), jnp.float32))
+    with pytest.raises(A.VerificationError) as ei:
+        rosa.compile(f, eng, ex, donate_argnums=(2,), cache=False,
+                     verify="error")
+    assert any(fd.code == "DON001" for fd in ei.value.report.findings)

@@ -402,3 +402,63 @@ def test_sharded_serve_step_matches_oracle():
                        capture_output=True, text=True, env=env, timeout=600)
     assert r.returncode == 0, (r.stdout[-1000:], r.stderr[-2000:])
     assert "OK" in r.stdout
+
+
+# ---------------------------------------------------------------------------
+# Donation canaries: the compiled HLO must actually alias the state
+# ---------------------------------------------------------------------------
+def _abstract_serve_parts(cfg, scfg):
+    from repro.serve import decode as D
+    bundle = build_model(cfg)
+    params = bundle.abstract(jnp.float32)
+    state = jax.eval_shape(lambda: D.init_state(cfg, scfg))
+    admit = jax.eval_shape(lambda: D.null_admit(cfg, scfg))
+    return bundle, params, state, admit
+
+
+def test_serve_step_donation_canary(smoke_cfg):
+    """Pin: every buffer of the donated DecodeState comes back as a real
+    `input_output_alias` in the compiled serve step — a regression here
+    means the hot loop silently double-buffers the KV cache."""
+    from repro.analysis import AnalysisTarget, run_checks
+    from repro.serve import decode as D
+
+    scfg = ServeConfig(n_slots=2, max_len=24, prefill_chunk=4)
+    bundle, params, state, admit = _abstract_serve_parts(smoke_cfg, scfg)
+    temp = jax.ShapeDtypeStruct((), jnp.float32)
+    step = D.make_serve_step(bundle, scfg)
+    t = AnalysisTarget("canary:serve_step", step,
+                       (params, state, admit, temp),
+                       donate_argnums=(1,), hot_path=True)
+    assert list(run_checks([t], checks=["donation"])) == []
+
+
+def test_admit_and_evict_donation_canary(smoke_cfg):
+    from repro.analysis import AnalysisTarget, run_checks
+    from repro.serve import decode as D
+
+    scfg = ServeConfig(n_slots=2, max_len=24, prefill_chunk=4)
+    bundle, _, state, admit = _abstract_serve_parts(smoke_cfg, scfg)
+    slot = jax.ShapeDtypeStruct((), jnp.int32)
+    ts = [AnalysisTarget("canary:admit", D.make_admit_step(bundle, scfg),
+                         (state, admit), donate_argnums=(0,),
+                         hot_path=True),
+          AnalysisTarget("canary:evict", D.make_evict(bundle, scfg),
+                         (state, slot), donate_argnums=(0,),
+                         hot_path=True)]
+    assert list(run_checks(ts, checks=["donation"])) == []
+
+
+def test_serve_step_alias_map_nonempty(smoke_cfg):
+    """Raw-HLO pin (independent of the analysis machinery): the serve
+    step's module text carries one alias per DecodeState array leaf."""
+    from repro.analysis.hlo import parse_input_output_aliases
+    from repro.serve import decode as D
+
+    scfg = ServeConfig(n_slots=2, max_len=24, prefill_chunk=4)
+    bundle, params, state, admit = _abstract_serve_parts(smoke_cfg, scfg)
+    temp = jax.ShapeDtypeStruct((), jnp.float32)
+    step = D.make_serve_step(bundle, scfg)
+    txt = step.lower(params, state, admit, temp).compile().as_text()
+    n_state_leaves = len(jax.tree.leaves(state))
+    assert len(parse_input_output_aliases(txt)) >= n_state_leaves
