@@ -1,4 +1,4 @@
-"""repro.robust — vectorized Monte-Carlo device-variation subsystem.
+"""Vectorized Monte-Carlo device-variation subsystem (repro.robust).
 
 Splits the paper's noise story into its two physical time scales and makes
 both first-class, fully vectorized citizens:
@@ -11,11 +11,24 @@ both first-class, fully vectorized citizens:
                        pytree;
   chip ensembles       `ensemble` — an "N-chip wafer" evaluated in ONE
                        jitted vmapped call: per-chip accuracy, clean-logit
-                       agreement, yield statistics;
+                       agreement, yield statistics.  The default estimator
+                       is variance-reduced: antithetic mirrored chip pairs
+                       (`sample_ensemble(antithetic=True)`) plus a
+                       control-variate regression on a weight-realization
+                       surrogate (`EstimatorConfig`, `estimate_ensemble`),
+                       so ~4 probe chips predict 16-chip mean/yield;
+                       `FULL_MC` restores brute force;
   sensitivity          `sensitivity` — perturb-one-layer degradation
-                       profiling as a traced one-hot gate, (chips x layers)
-                       per mapping in one call, feeding
-                       `mapping.LayerProfile.d_is/d_ws` directly;
+                       profiling as a traced one-hot gate: ONE compiled
+                       call covers (mappings x chips x layers) through the
+                       mapping-gate superposition, feeding
+                       `mapping.LayerProfile.d_is/d_ws` directly.
+                       Matrices are cached in the content-addressed
+                       `rosa.PlanCache` per (layer, RosaConfig, measurement
+                       spec) via `cnn_degradation_source` — a warm
+                       `rosa.compile(...)` skips the MC stage, and
+                       `refresh_degradation_matrix` re-scores only changed
+                       layers;
   drift + re-trim      `drift` — thermal drift schedules with periodic
                        re-calibration through `mrr.voltage_of_weight`'s
                        `dt_trim` hook;
@@ -29,29 +42,40 @@ reuses it deterministically across decode steps.  CLI:
 
 from repro.robust.drift import DriftModel, DriftResult, residual_offsets, \
     simulate, simulate_cnn, trim_voltages
-from repro.robust.ensemble import (EnsembleResult, clean_reference,
-                                   evaluate_cnn_ensemble, evaluate_ensemble,
-                                   make_ensemble_eval)
+from repro.robust.ensemble import (FULL_MC, EnsembleResult, EstimatorConfig,
+                                   clean_reference, control_variate_accs,
+                                   estimate_ensemble, evaluate_cnn_ensemble,
+                                   evaluate_ensemble, layer_weights,
+                                   make_ensemble_eval, make_plan_eval,
+                                   surrogate_features)
 from repro.robust.sensitivity import (accuracy_guarded_plan,
                                       cnn_degradation_matrix,
+                                      cnn_degradation_source,
                                       cnn_profiles_mc, degradation_matrix,
-                                      plan_search, profile_layers_mc,
+                                      params_digest, plan_search,
+                                      profile_layers_mc,
+                                      refresh_degradation_matrix,
                                       searched_cnn_hybrid_plan,
                                       searched_hybrid_plan)
 from repro.robust.variation import (NO_VARIATION, PAPER_VARIATION,
-                                    VariationModel, chip_at, cnn_lane_dims,
-                                    ensemble_size, sample_chip,
-                                    sample_ensemble, scale_ensemble,
-                                    shift_thermal)
+                                    VariationModel, chip_at, chip_slice,
+                                    cnn_lane_dims, ensemble_size,
+                                    sample_chip, sample_ensemble,
+                                    scale_ensemble, shift_thermal)
 
 __all__ = [
-    "DriftModel", "DriftResult", "EnsembleResult", "NO_VARIATION",
+    "DriftModel", "DriftResult", "EnsembleResult", "EstimatorConfig",
+    "FULL_MC", "NO_VARIATION",
     "PAPER_VARIATION", "VariationModel", "accuracy_guarded_plan",
-    "chip_at", "clean_reference",
-    "cnn_degradation_matrix", "cnn_lane_dims", "cnn_profiles_mc",
-    "degradation_matrix", "ensemble_size", "evaluate_cnn_ensemble",
-    "evaluate_ensemble", "make_ensemble_eval", "plan_search",
-    "profile_layers_mc", "residual_offsets", "sample_chip",
+    "chip_at", "chip_slice", "clean_reference",
+    "cnn_degradation_matrix", "cnn_degradation_source", "cnn_lane_dims",
+    "cnn_profiles_mc", "control_variate_accs",
+    "degradation_matrix", "ensemble_size", "estimate_ensemble",
+    "evaluate_cnn_ensemble",
+    "evaluate_ensemble", "layer_weights", "make_ensemble_eval",
+    "make_plan_eval", "params_digest", "plan_search",
+    "profile_layers_mc", "refresh_degradation_matrix", "residual_offsets",
+    "sample_chip",
     "sample_ensemble", "scale_ensemble", "searched_cnn_hybrid_plan",
     "searched_hybrid_plan", "shift_thermal", "simulate", "simulate_cnn",
     "trim_voltages",

@@ -2,6 +2,7 @@
 
     PYTHONPATH=src python -m repro.robust ensemble    --model alexnet --n-chips 64
     PYTHONPATH=src python -m repro.robust sensitivity --model alexnet
+    PYTHONPATH=src python -m repro.robust smoke       --steps 40 --n-probe 2
     PYTHONPATH=src python -m repro.robust drift       --retrim-every 900
     PYTHONPATH=src python -m repro.robust sweep       --scales 0 0.5 1 2
 
@@ -20,6 +21,7 @@ from repro.robust import cli
 
 
 def main(argv: list[str] | None = None) -> int:
+    """Parse args, run the chosen study, print/save the report."""
     ap = argparse.ArgumentParser(prog="repro.robust",
                                  description=__doc__.split("\n")[0])
     ap.add_argument("cmd", choices=sorted(cli.RUNNERS),
@@ -33,6 +35,12 @@ def main(argv: list[str] | None = None) -> int:
                     help="evaluation images (default: per-study)")
     ap.add_argument("--sigma-scale", type=float, default=1.0)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--n-probe", type=int, default=4,
+                    help="[ensemble] chips given real forwards; the rest "
+                         "are predicted by the control-variate surrogate")
+    ap.add_argument("--exact", action="store_true",
+                    help="[ensemble/sensitivity] brute-force MC: no "
+                         "antithetic pairing, every chip evaluated")
     ap.add_argument("--scales", type=float, nargs="+", default=None,
                     help="[sweep] sigma scales")
     ap.add_argument("--retrim-every", type=float, default=900.0,
@@ -50,6 +58,11 @@ def main(argv: list[str] | None = None) -> int:
         kw["n_eval"] = args.n_eval
     if args.cmd in ("ensemble", "sensitivity"):
         kw["sigma_scale"] = args.sigma_scale
+        kw["antithetic"] = not args.exact
+    if args.cmd == "ensemble":
+        kw["n_probe"] = 0 if args.exact else args.n_probe
+    if args.cmd == "smoke":
+        kw["n_probe"] = args.n_probe
     if args.cmd == "sweep" and args.scales is not None:
         kw["scales"] = tuple(args.scales)
     if args.cmd == "drift":

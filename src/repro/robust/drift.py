@@ -39,8 +39,9 @@ class DriftModel:
 
     def offsets(self, t_grid: np.ndarray,
                 key: jax.Array | None = None) -> np.ndarray:
-        """d(t) sampled on the grid; `walk` needs a key (Gaussian steps
-        scaled so the horizon-end std is ~amp_k)."""
+        """Offsets d(t) sampled on the grid; `walk` needs a key (Gaussian steps
+        scaled so the horizon-end std is ~amp_k).
+        """
         t = np.asarray(t_grid, dtype=np.float64)
         if self.kind == "sine":
             return self.amp_k * np.sin(2.0 * np.pi * t / self.period_s)
@@ -59,7 +60,8 @@ class DriftModel:
 def trim_voltages(w_target, dt_known, p: mrr.MRRParams = mrr.DEFAULT_PARAMS):
     """Re-invoke the programming calibration against a measured thermal
     offset: voltages such that, WITH the offset present, the realized
-    weights hit their targets exactly (clipping aside)."""
+    weights hit their targets exactly (clipping aside).
+    """
     return jnp.clip(mrr.voltage_of_weight(w_target, p, dt_trim=dt_known),
                     p.v_min, p.v_max)
 
@@ -72,7 +74,8 @@ def residual_offsets(offsets: np.ndarray, t_grid: np.ndarray,
     sampled schedule (exact whenever trims land on grid points) — snapping
     to the previous grid sample would silently ignore trims falling
     between samples.  `retrim_every=None` disables re-trim (residual = raw
-    drift; a single calibration at t=0 is always assumed)."""
+    drift; a single calibration at t=0 is always assumed).
+    """
     t = np.asarray(t_grid, dtype=np.float64)
     if retrim_every is None:
         return offsets - offsets[0]
@@ -82,6 +85,7 @@ def residual_offsets(offsets: np.ndarray, t_grid: np.ndarray,
 
 @dataclasses.dataclass
 class DriftResult:
+    """Time series of ensemble accuracy under a drift schedule."""
     times: np.ndarray               # (T,) [s]
     residual_k: np.ndarray          # (T,) effective thermal offset [K]
     mean_acc: np.ndarray            # (T,) ensemble-mean accuracy [%]
@@ -90,9 +94,11 @@ class DriftResult:
     clean_acc: float
 
     def worst_mean_acc(self) -> float:
+        """Lowest ensemble-mean accuracy over the time grid."""
         return float(self.mean_acc.min())
 
     def summary(self) -> dict:
+        """One-level dict of the headline drift statistics."""
         return {"clean_acc": self.clean_acc,
                 "worst_mean_acc": self.worst_mean_acc(),
                 "final_mean_acc": float(self.mean_acc[-1]),
@@ -110,7 +116,8 @@ def simulate(apply_fn: ApplyFn, params, x, y, engine, ensemble: V.Chip,
     time step (only the ddt leaves change); pass `evaluator` (a
     `make_ensemble_eval` result for the same apply_fn/engine/eval_batch)
     to reuse the compilation across several simulations — e.g. the
-    with/without-re-trim pair."""
+    with/without-re-trim pair.
+    """
     t = np.asarray(t_grid, dtype=np.float64)
     key, k_walk = jax.random.split(key)
     offs = drift.offsets(t, k_walk)
@@ -142,6 +149,7 @@ def simulate_cnn(params, model: str, engine, ensemble: V.Chip,
                  retrim_every: float | None = None, *,
                  n_eval: int = 256, eval_batch: int = 128,
                  evaluator=None) -> DriftResult:
+    """CNN front-end of `simulate` on the synth-CIFAR eval set."""
     x, y = cnn_eval_set(n_eval)
     return simulate(cnn_apply_fn(model), params, x, y, engine, ensemble,
                     key, drift, t_grid, retrim_every,

@@ -29,6 +29,27 @@ from repro.robust import variation as V
 ApplyFn = Callable[..., jax.Array]
 
 
+@dataclasses.dataclass(frozen=True)
+class EstimatorConfig:
+    """Variance-reduced ensemble estimator settings (hashable, jsonable).
+
+    ``n_probe`` chips get real eval-set forward passes; the remaining
+    chips' accuracies are predicted by a control-variate regression on a
+    cheap weight-realization surrogate (`surrogate_features`).  ``0``
+    probes means brute force: every chip is evaluated.  ``antithetic``
+    records whether the ensemble was drawn with mirrored chip pairs
+    (`variation.sample_ensemble(antithetic=True)`) — the probe prefix then
+    covers whole pairs, which centres the regression fit.
+    """
+
+    n_probe: int = 4
+    antithetic: bool = True
+    control_variate: bool = True
+
+
+FULL_MC = EstimatorConfig(n_probe=0, antithetic=False, control_variate=False)
+
+
 @dataclasses.dataclass
 class EnsembleResult:
     """Per-chip statistics of one ensemble evaluation."""
@@ -37,46 +58,61 @@ class EnsembleResult:
     #                            clean predictions when labels are absent)
     agreement: np.ndarray      # (n_chips,) argmax agreement with clean [0,1]
     clean_acc: float           # noise-free reference accuracy [%]
+    n_probe: int = 0           # chips with measured (not predicted) accs;
+    #                            0 = all measured (brute-force MC)
+    method: str = "mc"         # "mc" | "control-variate"
 
     @property
     def n_chips(self) -> int:
+        """Number of chips in the ensemble."""
         return len(self.accs)
 
     @property
     def mean_acc(self) -> float:
+        """Ensemble-mean accuracy [%]."""
         return float(self.accs.mean())
 
     @property
     def std_acc(self) -> float:
+        """Across-chip accuracy standard deviation [pp]."""
         return float(self.accs.std())
 
     @property
     def min_acc(self) -> float:
+        """Worst-chip accuracy [%]."""
         return float(self.accs.min())
 
     @property
     def mean_drop_pp(self) -> float:
+        """Clean-minus-ensemble-mean accuracy drop [pp]."""
         return self.clean_acc - self.mean_acc
 
     def yield_frac(self, max_drop_pp: float = 2.0) -> float:
         """Fraction of chips within `max_drop_pp` of the clean model —
-        the wafer-yield figure of merit (higher is better)."""
+        the wafer-yield figure of merit (higher is better).
+        """
         return float((self.accs >= self.clean_acc - max_drop_pp).mean())
 
     def yield_curve(self, drops_pp: Sequence[float]) -> list[tuple[float, float]]:
+        """(drop_pp, yield) pairs over a grid of drop thresholds."""
         return [(float(d), self.yield_frac(d)) for d in drops_pp]
 
     def summary(self) -> dict:
-        return {"n_chips": self.n_chips, "clean_acc": self.clean_acc,
-                "mean_acc": self.mean_acc, "std_acc": self.std_acc,
-                "min_acc": self.min_acc,
-                "mean_agreement": float(self.agreement.mean()),
-                "yield_2pp": self.yield_frac(2.0)}
+        """One-level dict of the headline statistics (JSON-ready)."""
+        out = {"n_chips": self.n_chips, "clean_acc": self.clean_acc,
+               "mean_acc": self.mean_acc, "std_acc": self.std_acc,
+               "min_acc": self.min_acc,
+               "mean_agreement": float(self.agreement.mean()),
+               "yield_2pp": self.yield_frac(2.0), "method": self.method}
+        if self.n_probe:
+            out["n_probe"] = self.n_probe
+        return out
 
 
 def clean_reference(engine):
     """The noise-free twin of an engine: same plan with per-shot noise
-    muted, no pinned chip, no gates (blend or mapping), no key."""
+    muted, no pinned chip, no gates (blend or mapping), no key.
+    """
     plan = engine.plan.map_configs(
         lambda c: dataclasses.replace(c, noise=mrr.IDEAL))
     return engine.with_plan(plan).with_variation(None).with_gates(None) \
@@ -87,7 +123,8 @@ def chunk_eval_set(x: jax.Array, size: int) -> jax.Array:
     """(N, ...) -> (N//size, size, ...) micro-batches for `lax.map`
     streaming.  A remainder that does not fill a chunk is dropped — loudly,
     because every downstream accuracy/yield statistic would silently run
-    on fewer samples than the caller asked for."""
+    on fewer samples than the caller asked for.
+    """
     size = min(size, x.shape[0])
     n = (x.shape[0] // size) * size
     if n < x.shape[0]:
@@ -103,7 +140,8 @@ def chunked_argmax_preds(apply_fn: ApplyFn, params, xb: jax.Array, engine
                          ) -> jax.Array:
     """Stream the (n_chunks, chunk, ...) batches through the engine and
     return flat argmax predictions — the shared inner evaluator of
-    ensemble/sensitivity/plan-search (trace it inside jit/vmap)."""
+    ensemble/sensitivity/plan-search (trace it inside jit/vmap).
+    """
     return jax.lax.map(
         lambda xc: jnp.argmax(apply_fn(params, xc, engine), -1),
         xb).reshape(-1)
@@ -122,10 +160,12 @@ def make_ensemble_eval(apply_fn: ApplyFn, engine, *, eval_batch: int = 128):
 
     @jax.jit
     def run(params, x, y, ens, keys):
+        """Jitted ensemble evaluation body."""
         xb = chunk_eval_set(x, eval_batch)
         clean_pred = chunked_argmax_preds(apply_fn, params, xb, clean_engine)
 
         def one_chip(var, k):
+            """Evaluate one chip of the vmapped ensemble."""
             return chunked_argmax_preds(
                 apply_fn, params, xb, engine.with_variation(var).with_key(k))
 
@@ -144,7 +184,8 @@ def evaluate_ensemble(apply_fn: ApplyFn, params, x, y, engine,
                       eval_batch: int = 128) -> EnsembleResult:
     """One-shot convenience around `make_ensemble_eval` (builds, runs,
     wraps).  `y=None` scores argmax agreement against the clean model
-    (label-free workloads: LM logit agreement)."""
+    (label-free workloads: LM logit agreement).
+    """
     n = V.ensemble_size(ensemble)
     keys = jax.random.split(key, n)
     run = make_ensemble_eval(apply_fn, engine, eval_batch=eval_batch)
@@ -155,9 +196,175 @@ def evaluate_ensemble(apply_fn: ApplyFn, params, x, y, engine,
 
 
 # ---------------------------------------------------------------------------
+# Variance-reduced estimation: antithetic pairs + control-variate surrogate
+# ---------------------------------------------------------------------------
+def layer_weights(params, names) -> dict:
+    """Extract per-layer weight arrays `{name: (K, N) array}` from params.
+
+    Accepts both the CNN convention (``params[name]["w"]``) and bare-array
+    layers (``params[name]`` is the weight itself, the toy-MLP test
+    convention).  Layers without a recognizable weight are skipped — they
+    simply contribute no surrogate feature.
+    """
+    out = {}
+    for n in names:
+        p = params.get(n) if hasattr(params, "get") else None
+        if isinstance(p, dict):
+            p = p.get("w")
+        if p is not None and getattr(p, "ndim", 0) >= 1:
+            out[n] = p
+    return out
+
+
+def surrogate_features(weights: dict, ensemble: V.Chip, engine) -> np.ndarray:
+    """Per-chip surrogate `s_c`: summed weight-realization RMS errors.
+
+    For every chip `c` and layer `l`, `rosa.backends.realization_rms_error`
+    measures how far the chip's static variation pulls the programmed
+    weights off their quantized targets — no eval-set forwards, one
+    `realize_weights` sweep per (chip, layer), vmapped over the ensemble.
+    The per-layer errors are summed into a single (n_chips,) feature: chips
+    that distort their weights more degrade more, and the relation is
+    close enough to linear for a 2-parameter regression fit on a handful
+    of probe chips (`estimate_ensemble`).
+    """
+    from repro.rosa.backends import realization_rms_error
+
+    names = [n for n in weights if n in ensemble
+             and engine.plan.resolve(n) is not None]
+
+    @jax.jit
+    def run(ws, ens):
+        """Jitted ensemble evaluation body."""
+        def one_chip(var):
+            """Evaluate one chip of the vmapped ensemble."""
+            errs = [realization_rms_error(ws[n], engine.plan.resolve(n),
+                                          var[n]) for n in names]
+            return jnp.stack(errs).sum()
+
+        return jax.vmap(one_chip)({n: ens[n] for n in names})
+
+    if not names:
+        return np.zeros(V.ensemble_size(ensemble))
+    return np.asarray(run({n: weights[n] for n in names},
+                          {n: ensemble[n] for n in names}))
+
+
+def control_variate_accs(probe_accs: np.ndarray, features: np.ndarray,
+                         n_probe: int) -> np.ndarray:
+    """Predict all-chip accuracies from `n_probe` measured ones.
+
+    Ordinary least squares of the probe accuracies on the surrogate
+    feature, ``acc ~ b - a * s`` with the slope clipped to ``a >= 0`` (more
+    weight distortion can only hurt).  Probe chips keep their measured
+    values; the rest get the regression prediction, clipped to [0, 100].
+    Because OLS residuals average to zero over the fit set, the mean of
+    the combined vector IS the regression control-variate estimator of the
+    ensemble mean.  Fitting the coefficient on the same probes introduces
+    an O(1/n_probe) bias — small against the variance it removes (see
+    docs/robustness.md for the math and measured tolerances).
+    """
+    s, f = features[:n_probe], probe_accs
+    var_s = float(np.var(s))
+    if var_s > 1e-12:
+        a = max(0.0, -float(np.cov(s, f, bias=True)[0, 1]) / var_s)
+    else:
+        a = 0.0
+    b = float(np.mean(f)) + a * float(np.mean(s))
+    pred = np.clip(b - a * features, 0.0, 100.0)
+    pred[:n_probe] = probe_accs
+    return pred
+
+
+def estimate_ensemble(apply_fn: ApplyFn, params, x, y, engine,
+                      ensemble: V.Chip, key: jax.Array, *,
+                      estimator: EstimatorConfig = EstimatorConfig(),
+                      weights: dict | None = None,
+                      eval_batch: int = 128) -> EnsembleResult:
+    """Variance-reduced twin of `evaluate_ensemble`.
+
+    Runs real eval-set forwards for the first ``estimator.n_probe`` chips
+    only and predicts the remaining chips' accuracies through the
+    control-variate surrogate (`surrogate_features`), so ~4 evaluated
+    chips estimate a 16-chip wafer's mean accuracy and yield.  Draw the
+    ensemble with ``antithetic=True`` so the probe prefix covers mirrored
+    pairs.  ``n_probe=0`` (or ``control_variate=False``, or n_probe >=
+    n_chips) falls back to the exact brute-force path bit-for-bit.
+    """
+    n = V.ensemble_size(ensemble)
+    n_probe = estimator.n_probe
+    if not estimator.control_variate or n_probe <= 0 or n_probe >= n:
+        return evaluate_ensemble(apply_fn, params, x, y, engine, ensemble,
+                                 key, eval_batch=eval_batch)
+    keys = jax.random.split(key, n)[:n_probe]
+    run = make_ensemble_eval(apply_fn, engine, eval_batch=eval_batch)
+    p_accs, p_agree, clean_acc = run(params, x, y,
+                                     V.chip_slice(ensemble, n_probe), keys)
+    p_accs = np.asarray(p_accs)
+    if weights is None:
+        weights = layer_weights(params, list(ensemble))
+    feats = surrogate_features(weights, ensemble, engine)
+    accs = control_variate_accs(p_accs, feats, n_probe)
+    return EnsembleResult(accs=accs, agreement=np.asarray(p_agree),
+                          clean_acc=float(clean_acc), n_probe=n_probe,
+                          method="control-variate")
+
+
+def make_plan_eval(apply_fn: ApplyFn, engine, names, *,
+                   eval_batch: int = 128, gated: bool = False):
+    """One jitted evaluator shared by every hybrid-plan candidate.
+
+    Like `make_ensemble_eval` but the per-layer IS/WS choice arrives as a
+    traced ``sel`` vector of mapping gates (1 = IS, 0 = WS), so evaluating
+    a hybrid plan and its pure-WS baseline reuses ONE compiled program —
+    the plan axis never retraces.  Returns ``(params, x, y, ens, keys,
+    sel) -> (accs, agreement, clean_acc)``.
+
+    ``gated=True`` adds a trailing per-layer analog-gate vector ``g``
+    (``(params, x, y, ens, keys, sel, g) -> ...``): layer ``i`` runs the
+    analog path blended by ``g[i]`` in [0, 1] against the exact digital
+    one.  With ``g`` one-hot this is the perturb-one-layer degradation
+    cell, with ``g`` all-ones it is a full hybrid-plan (or pure-WS)
+    evaluation — so a single compiled program can serve ensemble probes,
+    the whole degradation matrix, the plan search, and the final plan
+    evaluations, as long as chip count and eval-set shape stay fixed
+    (`repro.robust.cli.run_smoke`).
+    """
+    clean_engine = clean_reference(engine)
+
+    @jax.jit
+    def run(params, x, y, ens, keys, sel, g=None):
+        """Jitted ensemble evaluation body."""
+        xb = chunk_eval_set(x, eval_batch)
+        clean_pred = chunked_argmax_preds(apply_fn, params, xb, clean_engine)
+        mgates = {n: sel[i] for i, n in enumerate(names)}
+        gates = None if g is None else {n: g[i]
+                                        for i, n in enumerate(names)}
+
+        def one_chip(var, k):
+            """Evaluate one chip of the vmapped ensemble."""
+            e = engine.with_variation(var).with_key(k) \
+                .with_mapping_gates(mgates).with_gates(gates)
+            return chunked_argmax_preds(apply_fn, params, xb, e)
+
+        preds = jax.vmap(one_chip)(ens, keys)
+        ref = clean_pred if y is None else y[:preds.shape[1]]
+        accs = 100.0 * jnp.mean(preds == ref[None, :], axis=1)
+        agreement = jnp.mean(preds == clean_pred[None, :], axis=1)
+        clean_acc = 100.0 * jnp.mean(clean_pred == ref)
+        return accs, agreement, clean_acc
+
+    if gated:
+        return run
+    return lambda params, x, y, ens, keys, sel: \
+        run(params, x, y, ens, keys, sel)
+
+
+# ---------------------------------------------------------------------------
 # CNN front-end (the paper's behavioural experiments)
 # ---------------------------------------------------------------------------
 def cnn_apply_fn(model: str) -> ApplyFn:
+    """The apply-fn closure of a lite-CNN zoo model."""
     from repro.models.cnn import LITE_MODELS, LITE_SKIPS, cnn_apply
     specs, skips = LITE_MODELS[model], LITE_SKIPS.get(model)
     return lambda params, x, engine: cnn_apply(params, specs, x, engine,
@@ -165,6 +372,7 @@ def cnn_apply_fn(model: str) -> ApplyFn:
 
 
 def cnn_eval_set(n_eval: int = 512, seed: int = 0):
+    """First `n_eval` synth-CIFAR test images and labels."""
     from repro.data.synth_cifar import train_test_split
     (_, _), (xte, yte) = train_test_split(seed=seed)
     return jnp.asarray(xte[:n_eval]), jnp.asarray(yte[:n_eval])
@@ -172,9 +380,18 @@ def cnn_eval_set(n_eval: int = 512, seed: int = 0):
 
 def evaluate_cnn_ensemble(params, model: str, engine, ensemble: V.Chip,
                           key: jax.Array, *, n_eval: int = 512,
-                          eval_batch: int = 128,
-                          seed: int = 0) -> EnsembleResult:
-    """Ensemble statistics of a lite CNN on the synth-CIFAR test set."""
+                          eval_batch: int = 128, seed: int = 0,
+                          estimator: EstimatorConfig | None = None
+                          ) -> EnsembleResult:
+    """Ensemble statistics of a lite CNN on the synth-CIFAR test set.
+
+    ``estimator=None`` runs the exact brute-force MC; an `EstimatorConfig`
+    routes through the probe + control-variate path (`estimate_ensemble`).
+    """
     x, y = cnn_eval_set(n_eval, seed)
-    return evaluate_ensemble(cnn_apply_fn(model), params, x, y, engine,
-                             ensemble, key, eval_batch=eval_batch)
+    if estimator is None:
+        return evaluate_ensemble(cnn_apply_fn(model), params, x, y, engine,
+                                 ensemble, key, eval_batch=eval_batch)
+    return estimate_ensemble(cnn_apply_fn(model), params, x, y, engine,
+                             ensemble, key, estimator=estimator,
+                             eval_batch=eval_batch)

@@ -32,7 +32,8 @@ from repro.core.constants import Mapping, OPEConfig
 from repro.robust import variation as V
 from repro.robust.ensemble import (ApplyFn, chunk_eval_set,
                                    chunked_argmax_preds, clean_reference,
-                                   cnn_apply_fn, cnn_eval_set)
+                                   cnn_apply_fn, cnn_eval_set,
+                                   make_plan_eval)
 
 _D_CLIP = 0.0   # degradations are reported as max(clean - acc, 0), like
 #                 the serial profiler
@@ -44,53 +45,75 @@ def degradation_matrix(apply_fn: ApplyFn, params, x, y,
                        ensemble: V.Chip, key: jax.Array, *,
                        noise: mrr.NoiseModel = mrr.PAPER_NOISE,
                        mappings: Sequence[Mapping] = (Mapping.IS, Mapping.WS),
-                       eval_batch: int = 128) -> dict[str, dict[str, float]]:
+                       eval_batch: int = 128,
+                       layers: Sequence[str] | None = None,
+                       evaluator=None) -> dict[str, dict[str, float]]:
     """{layer: {mapping.value: degradation_pp}} over the chip ensemble.
 
-    One jitted vmap-over-(chips x layers) call per mapping.  `y=None`
-    scores clean-logit agreement (label-free profiling).
+    ONE compiled program covers the whole (mappings x chips x layers) grid:
+    both "which single layer runs the analog path" (a one-hot gate vector)
+    and "which mapping orientation" (`rosa_matmul`'s ``mgate``) are traced
+    arguments of a single gated plan evaluator (`ensemble.make_plan_eval`),
+    so every grid cell re-dispatches the same executable — no per-cell (or
+    per-mapping) recompilation, and a shared clean-reference forward.
+    (The shared clean reference requires the clean forward to be
+    mapping-independent, which holds whenever ``act_per_vector`` is off —
+    the digital paths of IS and WS are then identical.)
+
+    ``layers`` restricts scoring to a subset of columns (the incremental
+    re-score path — see `refresh_degradation_matrix`); the returned dict
+    contains only the scored layers.  `y=None` scores clean-logit
+    agreement (label-free profiling).  ``evaluator`` accepts a pre-built
+    gated evaluator (same layer names, chip count and eval-set shape) so
+    callers like `cli.run_smoke` share one compile across the matrix, the
+    plan search and the final plan evaluations.
     """
     names = list(layer_names)
-    n_layers = len(names)
+    scored = names if layers is None else [n for n in names
+                                           if n in set(layers)]
     n_chips = V.ensemble_size(ensemble)
     keys = jax.random.split(key, n_chips)
-    eye = jnp.eye(n_layers)
-
-    out: dict[str, dict[str, float]] = {n: {} for n in names}
-    for mp in mappings:
-        cfg = dataclasses.replace(base_cfg, mapping=mp, noise=noise)
+    if evaluator is None:
+        cfg = dataclasses.replace(base_cfg, mapping=Mapping.WS, noise=noise)
         engine = rosa.Engine(rosa.ExecutionPlan.build(cfg, None, names))
-        clean_cfg = dataclasses.replace(base_cfg, mapping=mp,
-                                        noise=mrr.IDEAL)
-        clean_engine = rosa.Engine(
-            rosa.ExecutionPlan.build(clean_cfg, None, names))
+        evaluator = make_plan_eval(apply_fn, engine, names,
+                                   eval_batch=eval_batch, gated=True)
 
-        @jax.jit
-        def run(params, x, y, ens, keys, engine=engine,
-                clean_engine=clean_engine):
-            xb = chunk_eval_set(x, eval_batch)
-            clean_pred = chunked_argmax_preds(apply_fn, params, xb,
-                                              clean_engine)
-            ref = clean_pred if y is None else y[:clean_pred.shape[0]]
-            clean_acc = 100.0 * jnp.mean(clean_pred == ref)
+    eye = np.eye(len(names), dtype=np.float32)
+    out: dict[str, dict[str, float]] = {n: {} for n in scored}
+    for mp in mappings:
+        sel = jnp.full(len(names), 0.0 if mp is Mapping.WS else 1.0,
+                       dtype=jnp.float32)
+        for n in scored:
+            g = jnp.asarray(eye[names.index(n)])
+            accs, _, clean_acc = evaluator(params, x, y, ensemble, keys,
+                                           sel, g)
+            out[n][mp.value] = max(
+                float(clean_acc) - float(np.asarray(accs).mean()), _D_CLIP)
+    return out
 
-            def one_chip(var, k):
-                def one_layer(onehot):
-                    gates = {n: onehot[i] for i, n in enumerate(names)}
-                    e = engine.with_variation(var).with_gates(gates) \
-                        .with_key(k)
-                    return chunked_argmax_preds(apply_fn, params, xb, e)
-                preds = jax.vmap(one_layer)(eye)       # (L, n_eval)
-                return 100.0 * jnp.mean(preds == ref[None, :], axis=1)
 
-            accs = jax.vmap(one_chip)(ens, keys)       # (n_chips, L)
-            return clean_acc, accs
+def refresh_degradation_matrix(prev: dict[str, dict[str, float]],
+                               changed_layers: Sequence[str],
+                               apply_fn: ApplyFn, params, x, y,
+                               layer_names: Sequence[str],
+                               base_cfg: rosa.RosaConfig,
+                               ensemble: V.Chip, key: jax.Array,
+                               **kwargs) -> dict[str, dict[str, float]]:
+    """Incrementally re-score ONLY `changed_layers`, reusing `prev` rows.
 
-        clean_acc, accs = run(params, x, y, ensemble, keys)
-        mean_accs = np.asarray(accs).mean(axis=0)      # MC over chips
-        for i, n in enumerate(names):
-            out[n][mp.value] = max(float(clean_acc) - float(mean_accs[i]),
-                                   _D_CLIP)
+    Because exactly one layer runs the analog path per one-hot evaluation,
+    a layer's degradation row is independent of every other layer's
+    mapping gate — so after a gate flip (or a new layer appearing in the
+    trace) only the affected columns need re-measuring.  The result equals
+    a full `degradation_matrix` over the union of layers, bit-for-bit,
+    when called with the same ensemble and key (tested).
+    """
+    fresh = degradation_matrix(apply_fn, params, x, y, layer_names,
+                               base_cfg, ensemble, key,
+                               layers=changed_layers, **kwargs)
+    out = {n: dict(v) for n, v in prev.items()}
+    out.update(fresh)
     return out
 
 
@@ -100,46 +123,34 @@ def plan_search(apply_fn: ApplyFn, params, x, y,
                 ensemble: V.Chip, key: jax.Array,
                 candidates: np.ndarray, *,
                 noise: mrr.NoiseModel = mrr.PAPER_NOISE,
-                eval_batch: int = 64) -> np.ndarray:
-    """MC-evaluate a whole batch of hybrid-plan candidates in ONE jitted
-    call.
+                eval_batch: int = 64, evaluator=None) -> np.ndarray:
+    """MC-evaluate a whole batch of hybrid-plan candidates through ONE
+    compiled program.
 
     `candidates` is a (P, L) binary matrix (row p, column l: layer l runs
     IS when 1, WS when 0).  Each layer's WS/IS orientation is superposed
-    behind a traced mapping gate (`rosa_matmul`'s `mgate`), so the plan
-    axis vmaps like any other batch axis — P plans x n_chips ensemble
-    forwards per call, identical PRNG draws across plans.  Returns the
-    (P,) ensemble-mean accuracies [%]; `y=None` scores clean-logit
-    agreement (label-free zoo workloads).
+    behind a traced mapping gate (`rosa_matmul`'s `mgate`), so every plan
+    row re-dispatches the same executable — P plans x n_chips ensemble
+    forwards, identical PRNG draws across plans.  Returns the (P,)
+    ensemble-mean accuracies [%]; `y=None` scores clean-logit agreement
+    (label-free zoo workloads).  ``evaluator`` accepts a pre-built gated
+    plan evaluator to share its compile (see `degradation_matrix`).
     """
     names = list(layer_names)
     n_chips = V.ensemble_size(ensemble)
     keys = jax.random.split(key, n_chips)
-    cand = jnp.asarray(candidates, dtype=jnp.float32)
-    cfg = dataclasses.replace(base_cfg, mapping=Mapping.WS, noise=noise)
-    engine = rosa.Engine(rosa.ExecutionPlan.build(cfg, None, names))
-    clean_engine = clean_reference(engine)
-
-    @jax.jit
-    def run(params, x, y, ens, keys, cand):
-        xb = chunk_eval_set(x, eval_batch)
-        ref = y[:xb.shape[0] * xb.shape[1]] if y is not None \
-            else chunked_argmax_preds(apply_fn, params, xb, clean_engine)
-
-        def one_plan(sel):
-            mgates = {n: sel[i] for i, n in enumerate(names)}
-
-            def one_chip(var, k):
-                e = engine.with_variation(var).with_key(k) \
-                    .with_mapping_gates(mgates)
-                preds = chunked_argmax_preds(apply_fn, params, xb, e)
-                return 100.0 * jnp.mean(preds == ref)
-
-            return jnp.mean(jax.vmap(one_chip)(ens, keys))
-
-        return jax.vmap(one_plan)(cand)
-
-    return np.asarray(run(params, x, y, ensemble, keys, cand))
+    if evaluator is None:
+        cfg = dataclasses.replace(base_cfg, mapping=Mapping.WS, noise=noise)
+        engine = rosa.Engine(rosa.ExecutionPlan.build(cfg, None, names))
+        evaluator = make_plan_eval(apply_fn, engine, names,
+                                   eval_batch=eval_batch, gated=True)
+    ones = jnp.ones(len(names), dtype=jnp.float32)
+    out = []
+    for row in np.asarray(candidates, dtype=np.float32):
+        accs, _, _ = evaluator(params, x, y, ensemble, keys,
+                               jnp.asarray(row), ones)
+        out.append(float(np.asarray(accs).mean()))
+    return np.asarray(out)
 
 
 def searched_hybrid_plan(profiles: Sequence[M.LayerProfile],
@@ -149,7 +160,7 @@ def searched_hybrid_plan(profiles: Sequence[M.LayerProfile],
                          noise: mrr.NoiseModel = mrr.PAPER_NOISE,
                          max_extra_pp: float = 0.5,
                          max_candidates: int = 6,
-                         eval_batch: int = 64
+                         eval_batch: int = 64, evaluator=None
                          ) -> tuple[dict[str, Mapping], dict]:
     """Accuracy-verified hybrid search: profile-guided candidate ordering,
     MC-verified in one vectorized call.
@@ -176,7 +187,8 @@ def searched_hybrid_plan(profiles: Sequence[M.LayerProfile],
         cand[k + 1:, names.index(layer)] = 1.0
 
     accs = plan_search(apply_fn, params, x, y, names, base_cfg, ensemble,
-                       key, cand, noise=noise, eval_batch=eval_batch)
+                       key, cand, noise=noise, eval_batch=eval_batch,
+                       evaluator=evaluator)
     best = accs.max()
     # most IS-aggressive among the exact-best rows (EDP tie-break)
     p_star = int(max(np.flatnonzero(accs >= best)))
@@ -197,7 +209,8 @@ def accuracy_guarded_plan(profiles: Sequence[M.LayerProfile],
     variation the raw paper metric can trade tens of pp for EDP (its alpha
     term grows only logarithmically); the guard keeps the Table-4 direction
     (hybrid accuracy >= WS) while still harvesting EDP wherever it is
-    accuracy-free."""
+    accuracy-free.
+    """
     plan: dict[str, Mapping] = {}
     for p in profiles:
         m = M.choose_mapping(p)
@@ -211,7 +224,8 @@ def profile_layers_mc(layers: Sequence[E.LayerShape], ope: OPEConfig,
                       degradation: dict[str, dict[str, float]], *,
                       batch: int = 1, **kwargs) -> list[M.LayerProfile]:
     """Join a Monte-Carlo degradation matrix with the vectorized EDP model
-    into `mapping.LayerProfile`s — drop-in input for `hybrid_plan`."""
+    into `mapping.LayerProfile`s — drop-in input for `hybrid_plan`.
+    """
     return M.profile_layers_fast(
         layers, ope,
         degradation_fn=M.degradation_fn_from_matrix(degradation),
@@ -228,10 +242,17 @@ def cnn_degradation_matrix(params, model: str, *,
                            var_model: V.VariationModel = V.PAPER_VARIATION,
                            ensemble: V.Chip | None = None,
                            n_eval: int = 256,
-                           eval_batch: int = 128
-                           ) -> dict[str, dict[str, float]]:
-    """Degradation matrix of a lite CNN over a freshly sampled (or given)
-    chip ensemble."""
+                           eval_batch: int = 128,
+                           antithetic: bool = False,
+                           layers: Sequence[str] | None = None,
+                           evaluator=None) -> dict[str, dict[str, float]]:
+    """Degradation matrix of a lite CNN over a chip ensemble.
+
+    The ensemble is freshly sampled (optionally with antithetic mirrored
+    pairs) unless one is passed in; ``layers`` restricts the scoring to a
+    column subset (incremental re-score); ``evaluator`` shares a pre-built
+    gated plan evaluator's compile (`ensemble.make_plan_eval`).
+    """
     from repro.models.cnn import LITE_MODELS
     from repro.training.cnn_train import QAT_CFG
 
@@ -240,11 +261,70 @@ def cnn_degradation_matrix(params, model: str, *,
     names = [s.name for s in LITE_MODELS[model]]
     if ensemble is None:
         ensemble = V.sample_ensemble(k_ens, n_chips,
-                                     V.cnn_lane_dims(model), var_model)
+                                     V.cnn_lane_dims(model), var_model,
+                                     antithetic=antithetic)
     x, y = cnn_eval_set(n_eval)
     return degradation_matrix(cnn_apply_fn(model), params, x, y, names,
                               QAT_CFG, ensemble, k_mc, noise=noise,
-                              eval_batch=eval_batch)
+                              eval_batch=eval_batch, layers=layers,
+                              evaluator=evaluator)
+
+
+def params_digest(params) -> str:
+    """Deterministic content hash of a parameter pytree.
+
+    Degradation matrices depend on the trained weights, so the weights'
+    digest is part of the PlanCache matrix key — retraining invalidates
+    cached matrices without any manual versioning.
+    """
+    import hashlib
+
+    from jax import tree_util
+
+    h = hashlib.sha256()
+    leaves = tree_util.tree_flatten_with_path(params)[0]
+    for path, leaf in sorted(leaves, key=lambda e: str(e[0])):
+        h.update(str(path).encode())
+        arr = np.asarray(leaf)
+        h.update(str((arr.dtype.str, arr.shape)).encode())
+        h.update(arr.tobytes())
+    return h.hexdigest()
+
+
+def cnn_degradation_source(params, model: str, *,
+                           n_chips: int = 4,
+                           noise: mrr.NoiseModel = mrr.PAPER_NOISE,
+                           var_model: V.VariationModel = V.PAPER_VARIATION,
+                           n_eval: int = 128, eval_batch: int = 64,
+                           antithetic: bool = True,
+                           seed: int = 42) -> "rosa.DegradationSource":
+    """A cacheable degradation-matrix provider for `rosa.compile`.
+
+    Bundles the measurement callable (the shared-forward
+    `cnn_degradation_matrix`, restricted to whichever layers the cache is
+    missing) with a JSON-able ``spec`` identifying everything the numbers
+    depend on: model, ensemble size/seed, antithetic pairing, eval-set
+    size, noise model, variation spec, and a digest of the trained params.
+    `rosa.compile(autotune=...)` content-addresses cached matrices by
+    (spec, RosaConfig) and calls ``measure`` only for absent layers —
+    a warm compile never runs the MC stage at all.
+    """
+    spec = {"kind": "cnn-mc", "model": model, "n_chips": n_chips,
+            "n_eval": n_eval, "eval_batch": eval_batch,
+            "antithetic": antithetic, "seed": seed,
+            "noise": rosa.serialize.to_jsonable(noise),
+            "variation": rosa.serialize.to_jsonable(var_model),
+            "params": params_digest(params)}
+    key = jax.random.PRNGKey(seed)
+
+    def measure(layer_names: Sequence[str]) -> dict:
+        """DegradationSource hook: measure the named layers' rows."""
+        return cnn_degradation_matrix(
+            params, model, n_chips=n_chips, key=key, noise=noise,
+            var_model=var_model, n_eval=n_eval, eval_batch=eval_batch,
+            antithetic=antithetic, layers=list(layer_names))
+
+    return rosa.DegradationSource(measure=measure, spec=spec)
 
 
 def searched_cnn_hybrid_plan(profiles: Sequence[M.LayerProfile], params,
@@ -266,7 +346,8 @@ def cnn_profiles_mc(params, model: str, ope: OPEConfig, *,
                     batch: int = 128,
                     **kwargs) -> list[M.LayerProfile]:
     """End to end: MC degradation matrix + full-size EDP rows -> profiles
-    for the layers that exist in both the lite model and the paper table."""
+    for the layers that exist in both the lite model and the paper table.
+    """
     from repro.configs.paper_cnns import CNN_WORKLOADS
 
     deg = cnn_degradation_matrix(params, model, **kwargs)

@@ -23,6 +23,7 @@ import zlib
 from typing import Mapping as TMapping, Sequence
 
 import jax
+import jax.numpy as jnp
 
 from repro.core import mrr
 from repro.core.constants import SIGMA_DAC_DEFAULT, SIGMA_TH_DEFAULT
@@ -40,10 +41,12 @@ class VariationModel:
 
     @property
     def is_zero(self) -> bool:
+        """Whether every variation sigma is exactly zero."""
         return (self.sigma_v_static == 0.0 and self.sigma_dt_static == 0.0
                 and self.sigma_lambda_fab == 0.0)
 
     def scaled(self, s: float) -> "VariationModel":
+        """Model with every sigma multiplied by `s`."""
         return VariationModel(self.sigma_v_static * s,
                               self.sigma_dt_static * s,
                               self.sigma_lambda_fab * s)
@@ -88,11 +91,29 @@ def sample_chip(key: jax.Array, dims: TMapping[str, int | Sequence[int]],
 
 def sample_ensemble(key: jax.Array, n_chips: int,
                     dims: TMapping[str, int | Sequence[int]],
-                    model: VariationModel = PAPER_VARIATION) -> Chip:
-    """An "N-chip wafer": `sample_chip` vmapped over `n_chips` keys —
-    every leaf gains a leading ensemble axis."""
-    keys = jax.random.split(key, n_chips)
-    return jax.vmap(lambda k: sample_chip(k, dims, model))(keys)
+                    model: VariationModel = PAPER_VARIATION, *,
+                    antithetic: bool = False) -> Chip:
+    """An "N-chip wafer": `sample_chip` vmapped over `n_chips` keys.
+
+    Every leaf gains a leading ensemble axis.  With ``antithetic=True``
+    (requires even `n_chips`) only ``n_chips // 2`` chips are drawn and
+    chip ``2i + 1`` is the sign-mirror of chip ``2i`` (every static field
+    negated).  The static fields are zero-mean Gaussians, so the mirrored
+    chip follows the SAME marginal distribution — the ensemble stays an
+    unbiased sample — but each pair's accuracy errors anticorrelate, which
+    cuts the Monte-Carlo variance of ensemble means (the antithetic-variate
+    half of `repro.robust.ensemble.estimate_ensemble`).
+    """
+    if not antithetic:
+        keys = jax.random.split(key, n_chips)
+        return jax.vmap(lambda k: sample_chip(k, dims, model))(keys)
+    if n_chips % 2:
+        raise ValueError(f"antithetic sampling pairs chips: n_chips must "
+                         f"be even, got {n_chips}")
+    half = sample_ensemble(key, n_chips // 2, dims, model)
+    return jax.tree.map(
+        lambda a: jnp.stack([a, -a], axis=1).reshape(n_chips, *a.shape[1:]),
+        half)
 
 
 def chip_at(ensemble: Chip, i) -> Chip:
@@ -100,7 +121,13 @@ def chip_at(ensemble: Chip, i) -> Chip:
     return jax.tree.map(lambda a: a[i], ensemble)
 
 
+def chip_slice(ensemble: Chip, n: int) -> Chip:
+    """The first `n` chips of an ensemble (the estimator's probe set)."""
+    return jax.tree.map(lambda a: a[:n], ensemble)
+
+
 def ensemble_size(ensemble: Chip) -> int:
+    """Number of chips in an ensemble pytree (leading axis)."""
     return jax.tree.leaves(ensemble)[0].shape[0]
 
 
@@ -111,7 +138,8 @@ def scale_ensemble(ensemble: Chip, s) -> Chip:
 
 def shift_thermal(ensemble: Chip, offset) -> Chip:
     """Add a global thermal offset [K] to every layer's ddt field — the
-    injection point for drift schedules (`repro.robust.drift`)."""
+    injection point for drift schedules (`repro.robust.drift`).
+    """
     return {name: v.shift_ddt(offset) for name, v in ensemble.items()}
 
 

@@ -1,4 +1,4 @@
-"""rosa — the unified execution-plan API over the optical backend.
+"""The rosa package: unified execution-plan API over the optical backend.
 
 Everything the paper's pipeline needs to execute a network optically enters
 through three objects:
@@ -51,22 +51,26 @@ deprecated; `rosa.compile` installs the engine around its own traces):
     RosaConfig(use_kernel=True)   -> RosaConfig(backend="pallas")
 """
 
+from repro.rosa import serialize
 from repro.rosa.backends import (DEFAULT, RosaConfig, backend_names,
-                                 make_backend, register_backend,
-                                 resolve_backend, rosa_matmul)
+                                 make_backend, realization_rms_error,
+                                 register_backend, resolve_backend,
+                                 rosa_matmul)
 from repro.rosa.engine import (Engine, ambient_engine, current_engine,
                                engine_context, layer_key, use_engine)
 from repro.rosa.ledger import EnergyLedger, MatmulEvent
 from repro.rosa.plan import ExecutionPlan
-from repro.rosa.program import (EDP_ONLY, AutotuneConfig, PlanCache,
-                                Program, ProgramTrace, TraceEntry,
-                                capture_trace, compile, default_cache_dir)
+from repro.rosa.program import (EDP_ONLY, AutotuneConfig, DegradationSource,
+                                PlanCache, Program, ProgramTrace,
+                                TraceEntry, capture_trace, compile,
+                                default_cache_dir)
 
 __all__ = [
-    "DEFAULT", "EDP_ONLY", "AutotuneConfig", "Engine", "EnergyLedger",
-    "ExecutionPlan", "MatmulEvent", "PlanCache", "Program", "ProgramTrace",
-    "RosaConfig", "TraceEntry", "ambient_engine", "backend_names",
-    "capture_trace", "compile", "current_engine", "default_cache_dir",
-    "engine_context", "layer_key", "make_backend", "register_backend",
-    "resolve_backend", "rosa_matmul", "use_engine",
+    "DEFAULT", "EDP_ONLY", "AutotuneConfig", "DegradationSource", "Engine",
+    "EnergyLedger", "ExecutionPlan", "MatmulEvent", "PlanCache", "Program",
+    "ProgramTrace", "RosaConfig", "TraceEntry", "ambient_engine",
+    "backend_names", "capture_trace", "compile", "current_engine",
+    "default_cache_dir", "engine_context", "layer_key", "make_backend",
+    "realization_rms_error", "register_backend", "resolve_backend",
+    "rosa_matmul", "serialize", "use_engine",
 ]

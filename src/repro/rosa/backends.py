@@ -62,6 +62,7 @@ class RosaConfig:
 
     @property
     def qcfg(self) -> quant.QuantConfig:
+        """Quantization config derived from `quant_bits`."""
         return quant.QuantConfig(bits=self.quant_bits)
 
 
@@ -82,12 +83,14 @@ _BACKENDS: dict[str, Backend] = {}
 def register_backend(name: str):
     """Decorator: register a contraction backend under `name`."""
     def deco(fn: Backend) -> Backend:
+        """Register `fn` under `name` and return it unchanged."""
         _BACKENDS[name] = fn
         return fn
     return deco
 
 
 def backend_names() -> list[str]:
+    """Registered contraction-backend names."""
     return sorted(_BACKENDS)
 
 
@@ -151,7 +154,8 @@ def _digital_path(t: jax.Array, cfg: RosaConfig,
                   per_vector: bool = False):
     """Exact digital EO encoding: quantization is the only error source.
     `per_vector` applies to the streamed (activation) operand only —
-    weights always share one programmed full-scale."""
+    weights always share one programmed full-scale.
+    """
     return quant.fake_quant(t, cfg.qcfg, per_vector=per_vector)
 
 
@@ -167,11 +171,33 @@ def _expand_lanes(var: mrr.StaticVariation | None, t: jax.Array):
     if var is None:
         return None
     def fix(a):
+        """Broadcast a per-channel array against the target's layout."""
         a = jnp.asarray(a)
         if a.ndim == 1 and t.ndim == 2 and a.shape[0] == t.shape[0]:
             return a[:, None]
         return a
     return mrr.StaticVariation(fix(var.dv), fix(var.ddt), fix(var.dlam))
+
+
+def realization_rms_error(t: jax.Array, cfg: RosaConfig,
+                          var: mrr.StaticVariation | None = None,
+                          per_vector: bool = False) -> jax.Array:
+    """RMS programming error of realizing `t` on this chip (scalar, no key).
+
+    The deviation between the ideal quantized operand and its *noiseless*
+    analog realization under the chip's static variation, in normalized
+    weight units.  Per-shot noise is deliberately excluded — it is i.i.d.
+    across chips, so only the static part discriminates between them.  This
+    is the control-variate surrogate feature of
+    `repro.robust.ensemble.estimate_ensemble`: it costs one
+    `realize_weights` sweep per (chip, layer) instead of a forward pass
+    over the evaluation set, and is vmappable over a chip ensemble.
+    """
+    scale = quant.absmax_scale(t, per_vector)
+    q = quant.fake_quant(t / scale, cfg.qcfg)
+    w = mrr.realize_weights(q, None, cfg.mrr_params, mrr.IDEAL,
+                            _expand_lanes(var, t))
+    return jnp.sqrt(jnp.mean((w - q) ** 2))
 
 
 def _analog_operand(t: jax.Array, cfg: RosaConfig, key: jax.Array | None,
@@ -180,7 +206,8 @@ def _analog_operand(t: jax.Array, cfg: RosaConfig, key: jax.Array | None,
     """Condition the analog-side operand: noisy realization under per-shot
     noise + static variation, optionally convex-blended against the exact
     digital path by a traced `gate` in [0, 1] (the vectorized
-    perturb-one-layer selector of `repro.robust.sensitivity`)."""
+    perturb-one-layer selector of `repro.robust.sensitivity`).
+    """
     clean = _digital_path(t, cfg, per_vector and cfg.act_per_vector)
     if cfg.noise.is_ideal and var is None and gate is None:
         return clean
@@ -197,7 +224,8 @@ def condition_weight(w: jax.Array, cfg: RosaConfig | None,
     """Weight conditioning outside the matmul fast path (per-channel
     contractions like depthwise conv): analog realization + gate blend.
     Identity when the layer is dense or fully ideal (matching the historic
-    dwconv behaviour: no fake-quant on the ideal path)."""
+    dwconv behaviour: no fake-quant on the ideal path).
+    """
     if cfg is None or (cfg.noise.is_ideal and var is None and gate is None):
         return w
     noisy = _noisy_realize(w, cfg, key, _expand_lanes(var, w))
@@ -301,5 +329,6 @@ rosa_matmul.defvjp(_fwd, _bwd)
 def make_backend(cfg: RosaConfig):
     """Callable matmul closure (legacy helper, kept for compatibility)."""
     def matmul(x, w, key=None):
+        """Closure: `x @ w` through `rosa_matmul` with this config."""
         return rosa_matmul(x, w, cfg, key)
     return matmul

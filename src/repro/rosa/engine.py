@@ -65,7 +65,8 @@ def ambient_engine() -> "Engine | None":
     signature.  Keep the context active around the `jax.jit` call: it is
     consulted while tracing, not at run time.  Prefer `rosa.compile` — a
     `Program` installs its engine around its own traces, so callers never
-    manage this context by hand."""
+    manage this context by hand.
+    """
     return _ENGINE_VAR.get()
 
 
@@ -74,7 +75,8 @@ def engine_context(engine: "Engine | None"):
     """Install `engine` as the ambient optical engine for model code.
 
     Context-local (thread- and task-safe): nested installs restore the
-    previous engine on exit, and other threads are unaffected."""
+    previous engine on exit, and other threads are unaffected.
+    """
     token = _ENGINE_VAR.set(engine)
     try:
         yield engine
@@ -104,7 +106,8 @@ def layer_key(base: jax.Array, name: str, step: int | jax.Array = 0
               ) -> jax.Array:
     """Deterministic per-layer/per-step key: fold the layer name's CRC and
     the step counter into the base key.  Same (base, name, step) -> same
-    noise draw, independent draws across layers and steps."""
+    noise draw, independent draws across layers and steps.
+    """
     k = jax.random.fold_in(base, zlib.crc32(name.encode("utf-8")) & 0x7FFFFFFF)
     return jax.random.fold_in(k, step)
 
@@ -159,25 +162,30 @@ class Engine:
                          key: jax.Array | None = None,
                          ledger: EnergyLedger | None = None) -> "Engine":
         """`cfg` everywhere, with the mapping field overridden per layer by
-        a `{layer: Mapping}` hybrid plan (core.mapping.hybrid_plan)."""
+        a `{layer: Mapping}` hybrid plan (core.mapping.hybrid_plan).
+        """
         return cls(ExecutionPlan.from_mapping_plan(cfg, plan or {}, layers),
                    key, ledger)
 
     # -- derivations --------------------------------------------------------
     def with_key(self, key: jax.Array | None) -> "Engine":
+        """Copy of the engine with the per-shot PRNG key replaced."""
         return dataclasses.replace(self, key=key)
 
     def with_ledger(self, ledger: EnergyLedger | None) -> "Engine":
+        """Copy of the engine with the energy ledger replaced."""
         return dataclasses.replace(self, ledger=ledger)
 
     def with_plan(self, plan: ExecutionPlan) -> "Engine":
+        """Copy of the engine with the execution plan replaced."""
         return dataclasses.replace(self, plan=plan)
 
     def with_variation(self, variation: TMapping[str, mrr.StaticVariation]
                        | None) -> "Engine":
         """Pin one sampled chip: every subsequent matmul of layer `name`
         applies `variation[name]` (layers absent from the dict run
-        variation-free).  Pass None to unpin."""
+        variation-free).  Pass None to unpin.
+        """
         return dataclasses.replace(
             self, variation=dict(variation) if variation is not None
             else None)
@@ -190,7 +198,8 @@ class Engine:
     def with_mapping_gates(self, mapping_gates: TMapping[str, jax.Array]
                            | None) -> "Engine":
         """Per-layer WS/IS selectors ({0=WS, 1=IS}, traced): superpose the
-        two mapping orientations so plan candidates can be vmapped."""
+        two mapping orientations so plan candidates can be vmapped.
+        """
         return dataclasses.replace(
             self, mapping_gates=dict(mapping_gates)
             if mapping_gates is not None else None)
@@ -198,22 +207,28 @@ class Engine:
     # -- resolution ---------------------------------------------------------
     @property
     def is_dense(self) -> bool:
+        """Whether every layer resolves to the dense digital path."""
         return self.plan.is_dense
 
     def config(self, name: str) -> RosaConfig | None:
+        """Resolved per-layer config (None = dense fallback)."""
         return self.plan.resolve(name)
 
     def key_for(self, name: str, step: int | jax.Array = 0
                 ) -> jax.Array | None:
+        """Per-layer, per-step PRNG key, or None when keyless."""
         return None if self.key is None else layer_key(self.key, name, step)
 
     def variation_for(self, name: str) -> mrr.StaticVariation | None:
+        """The pinned chip's variation for one layer, if any."""
         return None if self.variation is None else self.variation.get(name)
 
     def gate_for(self, name: str) -> jax.Array | None:
+        """The analog-blend gate for one layer, if any."""
         return None if self.gates is None else self.gates.get(name)
 
     def mapping_gate_for(self, name: str) -> jax.Array | None:
+        """The WS/IS mapping gate for one layer, if any."""
         return None if self.mapping_gates is None \
             else self.mapping_gates.get(name)
 
@@ -221,7 +236,7 @@ class Engine:
     def matmul(self, x: jax.Array, w: jax.Array, *, name: str = "",
                step: int | jax.Array = 0,
                key: jax.Array | None = None) -> jax.Array:
-        """y = x @ w through this layer's resolved config.
+        """Compute y = x @ w through this layer's resolved config.
 
         x: (..., K); w: (K, N).  An explicit `key` overrides the engine's
         folded per-layer key.  Dense layers (resolved config None) contract
@@ -252,7 +267,8 @@ class Engine:
         """Noise-place a weight tensor for contractions the engine does not
         route itself (per-channel depthwise convs): same analog realization,
         variation pinning and gate blending as `matmul`'s WS side; identity
-        for dense or fully ideal layers."""
+        for dense or fully ideal layers.
+        """
         cfg = self.plan.resolve(name)
         if key is None:
             key = self.key_for(name, step)

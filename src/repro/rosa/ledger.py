@@ -43,6 +43,7 @@ class MatmulEvent:
     tag: str = ""          # attribution scope (e.g. "prefill" / "decode")
 
     def layer_shape(self) -> E.LayerShape:
+        """This event as an energy-model LayerShape."""
         return E.LayerShape(self.name, m=self.m, k=self.k, n=self.n,
                             kind="gemm")
 
@@ -53,7 +54,8 @@ class EnergyLedger:
     `scope(tag)` attributes every matmul recorded inside it to `tag` —
     serving traces its prefill and decode steps under distinct scopes, so
     per-request energy (prompt energy + tokens x decode-step energy) can be
-    re-aggregated from one ledger without re-tracing."""
+    re-aggregated from one ledger without re-tracing.
+    """
 
     def __init__(self):
         self.events: list[MatmulEvent] = []
@@ -70,12 +72,14 @@ class EnergyLedger:
 
     def record(self, name: str, m: int, k: int, n: int,
                cfg: RosaConfig) -> None:
+        """Append one matmul event to the trace."""
         self.events.append(MatmulEvent(
             name=name, m=m, k=k, n=n,
             mapping=cfg.mapping, mode=cfg.mode, backend=cfg.backend,
             tag=self._tag))
 
     def clear(self) -> None:
+        """Drop every recorded event."""
         self.events.clear()
 
     def __len__(self) -> int:
@@ -89,7 +93,8 @@ class EnergyLedger:
         traced at a DIFFERENT shape (e.g. a prefill trace then a decode
         trace) is a distinct workload and keeps its own event rather than
         being silently discarded — clear() between traces if you want only
-        the latest.  `tag` filters to one attribution scope."""
+        the latest.  `tag` filters to one attribution scope.
+        """
         seen: dict[tuple, MatmulEvent] = {}
         for ev in self.events:
             if tag is not None and ev.tag != tag:
@@ -99,9 +104,11 @@ class EnergyLedger:
         return list(seen.values())
 
     def layer_shapes(self, tag: str | None = None) -> list[E.LayerShape]:
+        """LayerShapes of the deduplicated events."""
         return [ev.layer_shape() for ev in self.unique_events(tag)]
 
     def mapping_plan(self, tag: str | None = None) -> dict[str, Mapping]:
+        """`{layer: Mapping}` of the deduplicated events."""
         return {ev.name: ev.mapping for ev in self.unique_events(tag)}
 
     # -- pricing ------------------------------------------------------------
@@ -112,7 +119,8 @@ class EnergyLedger:
         """Price the trace on an OPE fleet.  With dedupe (default) each named
         layer counts once — the sequential-network semantics of
         core.energy.network_energy; without it every recorded call counts.
-        `tag` restricts pricing to one attribution scope."""
+        `tag` restricts pricing to one attribution scope.
+        """
         if dedupe:
             events = self.unique_events(tag)
         else:
@@ -137,14 +145,16 @@ class EnergyLedger:
         their m dimension, so the trace is priced as-is (batch=1 —
         passing `batch` into layer_energy again would double-count it)
         and only the division spreads it over the slots.  This is the
-        number `serve_smoke` exports as energy_per_token_j."""
+        number `serve_smoke` exports as energy_per_token_j.
+        """
         bd = self.breakdown(ope, osa, batch=1, tag=tag)
         return bd.energy / max(batch, 1)
 
     def edp(self, ope: OPEConfig, osa: E.OSAEnergyConfig = E.OSA_OPTIMAL,
             batch: int = 1, dedupe: bool = True) -> float:
         """Energy-delay product [J*s] of the recorded trace; equals
-        core.mapping.plan_edp on the same layers/plan by construction."""
+        core.mapping.plan_edp on the same layers/plan by construction.
+        """
         return self.breakdown(ope, osa, batch=batch, dedupe=dedupe).edp
 
     def export(self, ope: OPEConfig,
@@ -154,7 +164,8 @@ class EnergyLedger:
 
         One object per unique routed matmul plus the network totals — what
         `benchmarks/run.py` embeds so offline tooling can re-aggregate EDP
-        without replaying the trace."""
+        without replaying the trace.
+        """
         bd = self.breakdown(ope, osa, batch=batch)
         return {
             "ope": {"rows": ope.rows, "cols": ope.cols, "tiles": ope.tiles},

@@ -55,7 +55,8 @@ class ExecutionPlan:
                           ) -> "ExecutionPlan":
         """Lift a `{layer: Mapping}` hybrid plan (core.mapping.hybrid_plan)
         into per-layer configs: the default config with the mapping field
-        swapped per layer."""
+        swapped per layer.
+        """
         ov = {name: dataclasses.replace(default, mapping=m)
               for name, m in plan.items()}
         return cls.build(default, ov, layers)
@@ -63,7 +64,8 @@ class ExecutionPlan:
     # -- resolution ---------------------------------------------------------
     def resolve(self, name: str) -> RosaConfig | None:
         """Config for a named layer; raises KeyError on undeclared names
-        when the plan carries a declared layer set."""
+        when the plan carries a declared layer set.
+        """
         for n, cfg in self.overrides:
             if n == name:
                 return cfg
@@ -76,7 +78,8 @@ class ExecutionPlan:
     def map_configs(self, fn) -> "ExecutionPlan":
         """Derived plan with `fn(cfg)` applied to every non-None config
         (default and overrides) — e.g. flip the noise model or compute mode
-        across a whole plan without rebuilding it layer by layer."""
+        across a whole plan without rebuilding it layer by layer.
+        """
         return ExecutionPlan(
             fn(self.default) if self.default is not None else None,
             tuple((n, fn(c) if c is not None else None)
@@ -92,7 +95,8 @@ class ExecutionPlan:
     # -- JSON round-trip -----------------------------------------------------
     def to_json(self) -> dict:
         """JSON-native view; `ExecutionPlan.from_json` inverts it exactly.
-        This is what the on-disk plan cache persists."""
+        This is what the on-disk plan cache persists.
+        """
         from repro.rosa.serialize import config_to_json
         return {
             "default": config_to_json(self.default),
@@ -102,6 +106,7 @@ class ExecutionPlan:
 
     @classmethod
     def from_json(cls, doc: dict) -> "ExecutionPlan":
+        """Inverse of `to_json`."""
         from repro.rosa.serialize import config_from_json
         return cls(
             config_from_json(doc["default"]),

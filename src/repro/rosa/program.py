@@ -77,6 +77,7 @@ class TraceEntry:
     count: int = 1
 
     def layer_shape(self) -> E.LayerShape:
+        """This entry as an energy-model LayerShape."""
         return E.LayerShape(self.name, m=self.m, k=self.k, n=self.n,
                             kind="gemm")
 
@@ -89,9 +90,11 @@ class ProgramTrace:
 
     @property
     def names(self) -> tuple[str, ...]:
+        """Layer names in trace order."""
         return tuple(e.name for e in self.entries)
 
     def layer_shapes(self) -> list[E.LayerShape]:
+        """LayerShapes of every traced entry."""
         return [e.layer_shape() for e in self.entries]
 
     def __len__(self) -> int:
@@ -104,10 +107,12 @@ class ProgramTrace:
 
     # -- JSON round-trip -----------------------------------------------------
     def to_json(self) -> dict:
+        """JSON-able dict of the trace."""
         return {"entries": [to_jsonable(e) for e in self.entries]}
 
     @classmethod
     def from_json(cls, doc: dict) -> "ProgramTrace":
+        """Inverse of `to_json`."""
         return cls(tuple(TraceEntry(name=e["name"], m=int(e["m"]),
                                     k=int(e["k"]), n=int(e["n"]),
                                     count=int(e["count"]))
@@ -116,7 +121,8 @@ class ProgramTrace:
     @classmethod
     def from_ledger(cls, ledger: EnergyLedger) -> "ProgramTrace":
         """Collapse the raw (non-deduped) event list into counted entries,
-        first-seen order preserved."""
+        first-seen order preserved.
+        """
         counts: dict[tuple, int] = {}
         for ev in ledger.events:
             k = (ev.name, ev.m, ev.k, ev.n)
@@ -161,6 +167,12 @@ class AutotuneConfig:
     any per-layer choice that costs more than `guard_pp` percentage points
     over that layer's most robust mapping
     (`sensitivity.accuracy_guarded_plan`).
+
+    ``accuracy_aware`` (the default) lets a supplied degradation matrix or
+    `DegradationSource` steer the search; ``accuracy_aware=False`` (the
+    `EDP_ONLY` preset) mutes the accuracy term even when one is supplied —
+    the search is then the pure per-layer EDP argmin and degradation inputs
+    do not enter the cache key.
     """
 
     ope: OPEConfig = ROSA_OPTIMAL
@@ -168,19 +180,43 @@ class AutotuneConfig:
     mode: ComputeMode = ComputeMode.MIXED
     osa: E.OSAEnergyConfig = E.OSA_OPTIMAL
     guard_pp: float | None = None
+    accuracy_aware: bool = True
 
     def to_json(self) -> dict:
+        """Lower to a JSON-native dict (cache-key input)."""
         return to_jsonable(self)
 
     @classmethod
     def from_json(cls, doc: dict) -> "AutotuneConfig":
+        """Invert `to_json` (tolerates pre-schema-2 docs without the flag)."""
         return cls(ope=ope_from_json(doc["ope"]), batch=int(doc["batch"]),
                    mode=ComputeMode(doc["mode"]),
                    osa=osa_energy_from_json(doc["osa"]),
-                   guard_pp=doc["guard_pp"])
+                   guard_pp=doc["guard_pp"],
+                   accuracy_aware=bool(doc.get("accuracy_aware", True)))
 
 
-EDP_ONLY = AutotuneConfig()
+EDP_ONLY = AutotuneConfig(accuracy_aware=False)
+
+
+@dataclasses.dataclass(frozen=True)
+class DegradationSource:
+    """A measure-on-miss provider of Monte-Carlo degradation matrices.
+
+    ``measure(layer_names)`` returns ``{layer: {mapping: pp}}`` for exactly
+    the requested layers (the expensive MC stage); ``spec`` is a JSON-able
+    identity of everything those numbers depend on — ensemble size/seed,
+    noise and variation models, eval-set size, trained-params digest.
+    `compile` content-addresses cached matrices in the `PlanCache` by
+    (spec, base RosaConfig) and invokes ``measure`` only for layers the
+    cache does not already hold, so warm compiles skip the MC stage
+    entirely and trace growth re-scores only the new layers.  See
+    `repro.robust.sensitivity.cnn_degradation_source` for the canonical
+    constructor.
+    """
+
+    measure: Callable[[Sequence[str]], dict]
+    spec: Any
 
 
 # ---------------------------------------------------------------------------
@@ -191,10 +227,13 @@ _CACHE_ENV = "ROSA_PLAN_CACHE"
 # SEARCH itself changes meaning (profile_layers_fast semantics, the energy
 # model, the balanced metric, this file's search wiring) so stale plans
 # searched by older code can never be silently reused.
-_CACHE_SCHEMA = 1
+# 2: AutotuneConfig gained accuracy_aware; degradation matrices joined the
+#    cache (ISSUE 7 — shared-forward measurement changed their PRNG draws).
+_CACHE_SCHEMA = 2
 
 
 def default_cache_dir() -> pathlib.Path:
+    """Cache root: `$ROSA_PLAN_CACHE` or `~/.cache/rosa-repro/plans`."""
     return pathlib.Path(os.environ.get(
         _CACHE_ENV, "~/.cache/rosa-repro/plans")).expanduser()
 
@@ -219,6 +258,7 @@ class PlanCache:
     @staticmethod
     def key(trace: ProgramTrace, base_cfg, autotune: AutotuneConfig,
             degradation: dict | None = None) -> str:
+        """Content key of a (trace, config, autotune, degradation) plan."""
         return content_hash({
             "schema": _CACHE_SCHEMA,
             "trace": trace.to_json(),
@@ -228,6 +268,7 @@ class PlanCache:
         })
 
     def load(self, key: str) -> ExecutionPlan | None:
+        """The cached plan under `key`, or None on miss/corruption."""
         path = self._path(key)
         try:
             doc = json.loads(path.read_text())
@@ -242,19 +283,57 @@ class PlanCache:
 
     def store(self, key: str, plan: ExecutionPlan,
               trace: ProgramTrace) -> pathlib.Path:
-        self.root.mkdir(parents=True, exist_ok=True)
+        """Atomically persist a searched plan under its content key."""
         doc = {"schema": _CACHE_SCHEMA, "key": key, "plan": plan.to_json(),
                "trace_fingerprint": trace.fingerprint}
+        return self._write(self._path(key), doc)
+
+    def _write(self, path: pathlib.Path, doc: dict) -> pathlib.Path:
+        self.root.mkdir(parents=True, exist_ok=True)
         fd, tmp = tempfile.mkstemp(dir=self.root, suffix=".tmp")
         try:
             with os.fdopen(fd, "w") as f:
                 json.dump(doc, f, indent=1, sort_keys=True)
-            os.replace(tmp, self._path(key))
+            os.replace(tmp, path)
         except BaseException:
             with contextlib.suppress(FileNotFoundError):
                 os.unlink(tmp)
             raise
-        return self._path(key)
+        return path
+
+    # -- degradation matrices -------------------------------------------------
+    # One `<key>.deg.json` per (base RosaConfig, measurement spec): a
+    # per-layer accumulator, NOT a single frozen blob.  Entries are keyed
+    # by layer name inside, so a grown trace re-measures only its new
+    # layers (`DegradationSource`) and every earlier row is reused —
+    # the effective key of each row is (layer, RosaConfig, spec).
+    @staticmethod
+    def matrix_key(base_cfg, spec) -> str:
+        """Content key of a degradation-matrix store file."""
+        return content_hash({"schema": _CACHE_SCHEMA, "kind": "degradation",
+                             "config": config_to_json(base_cfg),
+                             "spec": to_jsonable(spec)})
+
+    def _matrix_path(self, key: str) -> pathlib.Path:
+        return self.root / f"{key}.deg.json"
+
+    def load_matrix(self, key: str) -> dict | None:
+        """The cached `{layer: {mapping: pp}}` rows, or None on any miss."""
+        try:
+            doc = json.loads(self._matrix_path(key).read_text())
+            if doc.get("schema") != _CACHE_SCHEMA or doc.get("key") != key:
+                return None
+            layers = doc["layers"]
+            return {str(n): {str(m): float(v) for m, v in row.items()}
+                    for n, row in layers.items()}
+        except (OSError, json.JSONDecodeError, KeyError, TypeError,
+                ValueError, AttributeError):
+            return None
+
+    def store_matrix(self, key: str, layers: dict) -> pathlib.Path:
+        """Atomically persist (or extend) a degradation-matrix store."""
+        doc = {"schema": _CACHE_SCHEMA, "key": key, "layers": layers}
+        return self._write(self._matrix_path(key), doc)
 
 
 def _resolve_cache(cache) -> PlanCache | None:
@@ -265,6 +344,28 @@ def _resolve_cache(cache) -> PlanCache | None:
     if isinstance(cache, PlanCache):
         return cache
     return PlanCache(cache)
+
+
+def _measured_matrix(src: DegradationSource, trace: ProgramTrace,
+                     base_cfg, store: PlanCache | None) -> dict:
+    """Degradation rows for the traced layers: cache first, measure the rest.
+
+    Loads whatever rows the PlanCache already holds under
+    `PlanCache.matrix_key(base_cfg, src.spec)`, measures ONLY the missing
+    layers (the incremental path — a warm cache measures nothing), marks
+    layers the source cannot score with an empty row so they are never
+    re-attempted, and persists the extended store.
+    """
+    mkey = PlanCache.matrix_key(base_cfg, src.spec)
+    have = (store.load_matrix(mkey) if store is not None else None) or {}
+    missing = [n for n in trace.names if n not in have]
+    if missing:
+        have = {**have, **src.measure(missing)}
+        for n in missing:
+            have.setdefault(n, {})
+        if store is not None:
+            store.store_matrix(mkey, have)
+    return {n: have[n] for n in trace.names if have.get(n)}
 
 
 # ---------------------------------------------------------------------------
@@ -295,6 +396,7 @@ class Program:
         self._donate = tuple(donate_argnums)
 
         def run(key, variation, *args):
+            """Jitted entry: rebind key/variation, then run the forward."""
             eng = engine
             if key is not None:
                 eng = eng.with_key(key)
@@ -319,12 +421,14 @@ class Program:
 
     @property
     def ledger(self) -> EnergyLedger | None:
+        """The frozen engine's ledger (None when unattached)."""
         return self.engine.ledger
 
     def lower(self) -> dict:
         """JSON-serializable artifact: the captured trace, the resolved
         plan, and the cache provenance — `ExecutionPlan.from_json` /
-        `ProgramTrace.from_json` invert the nested documents."""
+        `ProgramTrace.from_json` invert the nested documents.
+        """
         return {
             "trace": self.trace.to_json(),
             "plan": self.plan.to_json(),
@@ -334,34 +438,40 @@ class Program:
         }
 
     def lower_json(self) -> str:
+        """Canonical-JSON string of `lower()`."""
         return canonical_json(self.lower())
 
     # -- derivation ----------------------------------------------------------
     def with_engine(self, engine: Engine) -> "Program":
         """Same trace/provenance, different frozen engine (e.g. a pinned
-        chip or an attached ledger added after autotuning)."""
+        chip or an attached ledger added after autotuning).
+        """
         return Program(self.apply_fn, engine, self.trace,
                        donate_argnums=self._donate, searched=self.searched,
                        cache_hit=self.cache_hit, cache_key=self.cache_key)
 
     def with_variation(self, variation) -> "Program":
+        """Program with one sampled chip pinned on its engine."""
         return self.with_engine(self.engine.with_variation(variation))
 
     def with_ledger(self, ledger: EnergyLedger | None) -> "Program":
+        """Program with `ledger` attached to its engine."""
         return self.with_engine(self.engine.with_ledger(ledger))
 
     def bind(self, fn: Callable, *, donate_argnums=(),
              static_argnums=()) -> Callable:
-        """jit-compile an auxiliary function under this program's engine.
+        """Jit-compile an auxiliary function under this program's engine.
 
         The engine is installed as the ambient context while `fn` traces,
         so model code that resolves `rosa.ambient_engine()` sees the
         program's frozen (plan, chip, ledger) — this is how the serving
         scheduler builds its decode/prefill/admit steps from one Program
-        without any global engine stack."""
+        without any global engine stack.
+        """
         engine = self.engine
 
         def wrapped(*args, **kwargs):
+            """Run `fn` with this program's engine ambient."""
             with engine_context(engine):
                 return fn(*args, **kwargs)
 
@@ -375,7 +485,7 @@ class Program:
 def compile(apply_fn: ApplyFn, engine: Engine,
             example_args: Sequence[Any] = (), *,
             autotune: AutotuneConfig | None = None,
-            degradation: dict | None = None,
+            degradation: "dict | DegradationSource | None" = None,
             cache: "PlanCache | str | os.PathLike | None | bool" = None,
             donate_argnums: Sequence[int] = (),
             verify: str = "off") -> Program:
@@ -387,8 +497,13 @@ def compile(apply_fn: ApplyFn, engine: Engine,
     hybrid IS/WS plan search seeded from ``engine.plan.default`` (existing
     overrides are replaced by the searched plan); without it the engine's
     plan is taken as-is and compilation is trace + freeze.  ``degradation``
-    is an optional `{layer: {mapping: pp}}` Monte-Carlo matrix
-    (`repro.robust.sensitivity`) making the search accuracy-aware.
+    makes the search accuracy-aware (the default — mute it with
+    ``AutotuneConfig(accuracy_aware=False)`` / the `EDP_ONLY` preset):
+    either a ready `{layer: {mapping: pp}}` Monte-Carlo matrix
+    (`repro.robust.sensitivity`) or a `DegradationSource`, whose measured
+    rows are themselves cached in the `PlanCache` per (layer, RosaConfig,
+    measurement spec) — a warm compile loads them instead of re-running
+    the MC stage, and a grown trace measures only its new layers.
 
     Searched plans persist in the content-addressed `PlanCache` (``cache``:
     default directory when None, a directory path, a `PlanCache`, or
@@ -420,20 +535,37 @@ def compile(apply_fn: ApplyFn, engine: Engine,
                 "the search specializes per layer); got a dense default — "
                 "pass autotune=None to freeze the plan as-is")
         store = _resolve_cache(cache)
-        cache_key = PlanCache.key(trace, base_cfg, autotune, degradation)
+        src = degradation if isinstance(degradation, DegradationSource) \
+            else None
+        deg = degradation if isinstance(degradation, dict) else None
+        if not autotune.accuracy_aware:
+            # EDP_ONLY: the accuracy term is muted and degradation inputs
+            # are excluded from the cache key (they cannot affect the plan)
+            src = deg = None
+        key_deg = deg if deg is not None else \
+            ({"source": to_jsonable(src.spec)} if src is not None else None)
+        cache_key = PlanCache.key(trace, base_cfg, autotune, key_deg)
         plan = store.load(cache_key) if store is not None else None
         if plan is not None:
+            # warm compile: the plan (and with it, any MC measurement the
+            # search consumed) is loaded whole — the MC stage never runs
             cache_hit = True
         elif len(trace) == 0:
             plan = engine.plan     # nothing routed optically: nothing to tune
         else:
+            if src is not None:
+                deg = _measured_matrix(src, trace, base_cfg, store)
             d_fn = None
-            if degradation is not None:
-                d_fn = M.degradation_fn_from_matrix(degradation)
+            if deg is not None:
+                # default-0 lookup: layers the source could not score run
+                # EDP-only instead of crashing the whole search
+                matrix = deg
+                d_fn = lambda name, m: float(     # noqa: E731
+                    matrix.get(name, {}).get(m.value, 0.0))
             profiles = M.profile_layers_fast(
                 trace.layer_shapes(), autotune.ope, d_fn,
                 mode=autotune.mode, osa=autotune.osa, batch=autotune.batch)
-            if autotune.guard_pp is not None and degradation is not None:
+            if autotune.guard_pp is not None and deg is not None:
                 from repro.robust.sensitivity import accuracy_guarded_plan
                 mapping_plan = accuracy_guarded_plan(
                     profiles, max_extra_pp=autotune.guard_pp)

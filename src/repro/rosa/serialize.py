@@ -44,7 +44,7 @@ def canonical_json(doc: Any) -> str:
 
 
 def content_hash(*docs: Any) -> str:
-    """sha256 over the canonical JSON of `docs` — the cache-key primitive."""
+    """SHA-256 over the canonical JSON of `docs` — the cache-key primitive."""
     h = hashlib.sha256()
     for doc in docs:
         h.update(canonical_json(doc).encode("utf-8"))
@@ -56,10 +56,12 @@ def content_hash(*docs: Any) -> str:
 # RosaConfig
 # ---------------------------------------------------------------------------
 def config_to_json(cfg: RosaConfig | None) -> dict | None:
+    """RosaConfig -> JSON-able dict (None passes through)."""
     return None if cfg is None else to_jsonable(cfg)
 
 
 def config_from_json(doc: dict | None) -> RosaConfig | None:
+    """Inverse of `config_to_json`."""
     if doc is None:
         return None
     return RosaConfig(
@@ -79,10 +81,12 @@ def config_from_json(doc: dict | None) -> RosaConfig | None:
 # Energy-model configs (autotune settings)
 # ---------------------------------------------------------------------------
 def ope_from_json(doc: dict) -> OPEConfig:
+    """OPEConfig from its JSON dict."""
     return OPEConfig(rows=int(doc["rows"]), cols=int(doc["cols"]),
                      tiles=int(doc["tiles"]))
 
 
 def osa_energy_from_json(doc: dict) -> E.OSAEnergyConfig:
+    """OSAEnergyConfig from its JSON dict."""
     return E.OSAEnergyConfig(enabled=bool(doc["enabled"]),
                              ode_len=int(doc["ode_len"]))

@@ -376,3 +376,119 @@ def test_program_verify_catches_dropped_donation(key):
         rosa.compile(f, eng, ex, donate_argnums=(2,), cache=False,
                      verify="error")
     assert any(fd.code == "DON001" for fd in ei.value.report.findings)
+
+
+# ---------------------------------------------------------------------------
+# accuracy-aware default + cached degradation matrices
+# ---------------------------------------------------------------------------
+def _counting_source(calls):
+    """A DegradationSource whose measure() logs which layers it was asked
+    to score (IS mildly worse so the guard keeps WS deterministically)."""
+    def measure(names):
+        calls.append(tuple(names))
+        return {n: {Mapping.IS.value: 2.0, Mapping.WS.value: 0.0}
+                for n in names}
+    return rosa.DegradationSource(measure=measure, spec={"kind": "test",
+                                                         "v": 1})
+
+
+def test_autotune_accuracy_aware_default():
+    assert rosa.AutotuneConfig().accuracy_aware is True
+    assert rosa.EDP_ONLY.accuracy_aware is False
+    # old cached/serialized configs (no key) stay accuracy-aware
+    doc = rosa.AutotuneConfig().to_json()
+    doc.pop("accuracy_aware", None)
+    assert rosa.AutotuneConfig.from_json(doc).accuracy_aware is True
+
+
+def test_compile_measures_once_then_warm_skips_mc(key, tmp_path):
+    """Tentpole acceptance: a warm accuracy-aware compile takes its
+    degradation matrix from the PlanCache and never re-runs MC."""
+    eng = rosa.Engine.from_config(NOISY)
+    args = _args(key)
+    calls = []
+    src = _counting_source(calls)
+    cold = rosa.compile(_net, eng, args, autotune=TUNE, cache=tmp_path,
+                        degradation=src)
+    assert cold.searched and calls == [("a", "b")]
+    warm = rosa.compile(_net, eng, args, autotune=TUNE, cache=tmp_path,
+                        degradation=src)
+    assert warm.cache_hit and not warm.searched
+    assert calls == [("a", "b")]                  # MC stage skipped entirely
+    assert warm.plan == cold.plan
+    # plan evicted but matrix kept: re-search, still no re-measure
+    (tmp_path / f"{cold.cache_key}.json").unlink()
+    rewarm = rosa.compile(_net, eng, args, autotune=TUNE, cache=tmp_path,
+                          degradation=src)
+    assert rewarm.searched and calls == [("a", "b")]
+    assert rewarm.plan == cold.plan
+
+
+def test_matrix_cache_measures_only_missing_layers(key, tmp_path):
+    """Incremental re-score: rows already in the cache are reused and only
+    absent layers are measured."""
+    eng = rosa.Engine.from_config(NOISY)
+    args = _args(key)
+    calls = []
+    src = _counting_source(calls)
+    cache = rosa.PlanCache(tmp_path)
+    mkey = cache.matrix_key(NOISY, src.spec)
+    cache.store_matrix(mkey, {"a": {Mapping.IS.value: 2.0,
+                                    Mapping.WS.value: 0.0}})
+    prog = rosa.compile(_net, eng, args, autotune=TUNE, cache=tmp_path,
+                        degradation=src)
+    assert calls == [("b",)]                       # only the missing row
+    assert prog.searched
+    # the merged matrix is persisted: a fresh compile measures nothing
+    rosa.compile(_net, eng, args, cache=tmp_path, degradation=src,
+                 autotune=dataclasses.replace(TUNE, batch=8))
+    assert calls == [("b",)]
+
+
+def test_matrix_cache_invalidation(key, tmp_path):
+    """A changed variation spec or base RosaConfig must re-measure."""
+    eng = rosa.Engine.from_config(NOISY)
+    args = _args(key)
+    calls = []
+    src = _counting_source(calls)
+    rosa.compile(_net, eng, args, autotune=TUNE, cache=tmp_path,
+                 degradation=src)
+    assert len(calls) == 1
+    # same config, different spec -> different matrix key -> re-measure
+    src2 = rosa.DegradationSource(measure=src.measure,
+                                  spec={"kind": "test", "v": 2})
+    rosa.compile(_net, eng, args, autotune=TUNE, cache=tmp_path,
+                 degradation=src2)
+    assert len(calls) == 2
+    # same spec, different RosaConfig -> re-measure too
+    eng6 = rosa.Engine.from_config(dataclasses.replace(NOISY, quant_bits=6))
+    rosa.compile(_net, eng6, args, autotune=TUNE, cache=tmp_path,
+                 degradation=src)
+    assert len(calls) == 3
+
+
+def test_edp_only_ignores_degradation_source(key, tmp_path):
+    calls = []
+    src = _counting_source(calls)
+    eng = rosa.Engine.from_config(NOISY)
+    prog = rosa.compile(_net, eng, _args(key), cache=tmp_path,
+                        degradation=src,
+                        autotune=dataclasses.replace(
+                            rosa.EDP_ONLY, batch=TUNE.batch))
+    assert calls == []                             # MC never invoked
+    assert prog.searched
+    # and the EDP-only plan matches the historic accuracy-blind search
+    profs = M.profile_layers_fast(prog.trace.layer_shapes(), TUNE.ope,
+                                  batch=TUNE.batch)
+    assert prog.plan.mapping_plan() == M.hybrid_plan(profs)
+
+
+def test_matrix_cache_roundtrip_and_corruption(tmp_path):
+    cache = rosa.PlanCache(tmp_path)
+    mkey = cache.matrix_key(NOISY, {"kind": "test"})
+    layers = {"a": {Mapping.IS.value: 1.5, Mapping.WS.value: 0.25}}
+    cache.store_matrix(mkey, layers)
+    assert cache.load_matrix(mkey) == layers
+    assert cache.load_matrix("no-such-key") is None
+    (tmp_path / f"{mkey}.deg.json").write_text("{corrupt")
+    assert cache.load_matrix(mkey) is None         # never raises

@@ -380,3 +380,158 @@ def test_report_schema_roundtrip(tmp_path):
         == pytest.approx(1.0 / 3.0)
     assert rep.result("robust_test").metric("mean_acc").direction \
         == "higher_is_better"
+
+
+# ---------------------------------------------------------------------------
+# variance-reduced estimation: antithetic pairs + control-variate surrogate
+# ---------------------------------------------------------------------------
+def test_antithetic_sampling_mirrors_pairs(key):
+    ens = V.sample_ensemble(key, 6, _toy_dims(), antithetic=True)
+    for n in _toy_dims():
+        for f in ("dv", "ddt", "dlam"):
+            a = np.asarray(getattr(ens[n], f))
+            np.testing.assert_array_equal(a[1::2], -a[0::2])
+    # pairs are distinct draws, and the mean of each pair is exactly zero
+    assert not np.allclose(np.asarray(ens["a"].dv[0]),
+                           np.asarray(ens["a"].dv[2]))
+    with pytest.raises(ValueError):
+        V.sample_ensemble(key, 5, _toy_dims(), antithetic=True)
+
+
+def test_chip_slice_prefix(key):
+    ens = V.sample_ensemble(key, 8, _toy_dims(), antithetic=True)
+    sl = V.chip_slice(ens, 2)
+    assert V.ensemble_size(sl) == 2
+    np.testing.assert_array_equal(np.asarray(sl["a"].dv),
+                                  np.asarray(ens["a"].dv[:2]))
+
+
+def test_control_variate_accs_recovers_linear_relation():
+    feats = np.array([0.1, 0.2, 0.3, 0.4, 0.5, 0.6])
+    true = 90.0 - 20.0 * feats
+    pred = ENS.control_variate_accs(true[:3], feats, 3)
+    # an exactly linear probe relation extrapolates exactly
+    np.testing.assert_allclose(pred, true, atol=1e-8)
+    # degenerate (zero-variance) feature falls back to the probe mean
+    flat = ENS.control_variate_accs(np.array([60.0, 70.0]),
+                                    np.zeros(4), 2)
+    np.testing.assert_allclose(flat[2:], 65.0)
+    np.testing.assert_allclose(flat[:2], [60.0, 70.0])
+
+
+def test_estimator_probe_prefix_is_measured(key):
+    """Probe chips keep their real measured accuracies bit-for-bit."""
+    params = _toy_params(key)
+    x = jax.random.normal(jax.random.fold_in(key, 21), (32, 6))
+    y = jax.random.randint(jax.random.fold_in(key, 22), (32,), 0, 3)
+    ens = V.sample_ensemble(key, 8, _toy_dims(), antithetic=True)
+    engine = rosa.Engine.from_config(NOISY_CFG, layers=["a", "b"])
+    full = ENS.evaluate_ensemble(_toy_apply, params, x, y, engine, ens,
+                                 key, eval_batch=16)
+    est = ENS.estimate_ensemble(
+        _toy_apply, params, x, y, engine, ens, key,
+        estimator=ENS.EstimatorConfig(n_probe=4), eval_batch=16)
+    assert est.method == "control-variate" and est.n_probe == 4
+    np.testing.assert_array_equal(est.accs[:4], full.accs[:4])
+
+
+def test_estimator_within_tolerance_of_brute_force(key):
+    """Acceptance: ~4 evaluated chips predict the 16-chip wafer mean
+    within a pinned tolerance of the brute-force estimate."""
+    params = _toy_params(key)
+    x = jax.random.normal(jax.random.fold_in(key, 23), (48, 6))
+    y = jax.random.randint(jax.random.fold_in(key, 24), (48,), 0, 3)
+    ens = V.sample_ensemble(key, 16, _toy_dims(), antithetic=True)
+    engine = rosa.Engine.from_config(NOISY_CFG, layers=["a", "b"])
+    brute = ENS.evaluate_ensemble(_toy_apply, params, x, y, engine, ens,
+                                  key, eval_batch=16)
+    est = ENS.estimate_ensemble(
+        _toy_apply, params, x, y, engine, ens, key,
+        estimator=ENS.EstimatorConfig(n_probe=4), eval_batch=16)
+    assert est.n_chips == brute.n_chips == 16
+    assert abs(est.mean_acc - brute.mean_acc) <= 5.0
+    assert abs(est.yield_frac(2.0) - brute.yield_frac(2.0)) <= 0.5
+
+
+def test_full_mc_estimator_is_bitexact_fallback(key):
+    params = _toy_params(key)
+    x = jax.random.normal(jax.random.fold_in(key, 25), (32, 6))
+    y = jax.random.randint(jax.random.fold_in(key, 26), (32,), 0, 3)
+    ens = V.sample_ensemble(key, 4, _toy_dims())
+    engine = rosa.Engine.from_config(NOISY_CFG, layers=["a", "b"])
+    exact = ENS.evaluate_ensemble(_toy_apply, params, x, y, engine, ens,
+                                  key, eval_batch=16)
+    fb = ENS.estimate_ensemble(_toy_apply, params, x, y, engine, ens, key,
+                               estimator=ENS.FULL_MC, eval_batch=16)
+    np.testing.assert_array_equal(fb.accs, exact.accs)
+    assert fb.method == "mc" and fb.n_probe == 0
+
+
+def test_surrogate_features_no_forwards(key):
+    """The surrogate costs zero eval-set forwards and reacts to variation
+    strength monotonically enough to regress on."""
+    params = _toy_params(key)
+    ens = V.sample_ensemble(key, 4, _toy_dims())
+    engine = rosa.Engine.from_config(NOISY_CFG, layers=["a", "b"])
+    f1 = ENS.surrogate_features(ENS.layer_weights(params, ["a", "b"]),
+                                ens, engine)
+    assert f1.shape == (4,) and np.all(np.isfinite(f1)) and np.all(f1 >= 0)
+    f2 = ENS.surrogate_features(ENS.layer_weights(params, ["a", "b"]),
+                                V.scale_ensemble(ens, 3.0), engine)
+    assert f2.mean() > f1.mean()
+
+
+# ---------------------------------------------------------------------------
+# incremental degradation re-score + shared-compile evaluator
+# ---------------------------------------------------------------------------
+def test_incremental_matrix_equals_full(key):
+    """refresh over changed layers == full matrix, bit-for-bit (row
+    independence of the one-hot protocol)."""
+    params = _toy_params(key)
+    x = jax.random.normal(jax.random.fold_in(key, 27), (32, 6))
+    y = jax.random.randint(jax.random.fold_in(key, 28), (32,), 0, 3)
+    ens = V.sample_ensemble(key, 2, _toy_dims(), antithetic=True)
+    full = S.degradation_matrix(_toy_apply, params, x, y, ["a", "b"],
+                                rosa.RosaConfig(), ens, key, eval_batch=16)
+    only_a = S.degradation_matrix(_toy_apply, params, x, y, ["a", "b"],
+                                  rosa.RosaConfig(), ens, key,
+                                  eval_batch=16, layers=["a"])
+    assert set(only_a) == {"a"}
+    merged = S.refresh_degradation_matrix(
+        only_a, ["b"], _toy_apply, params, x, y, ["a", "b"],
+        rosa.RosaConfig(), ens, key, eval_batch=16)
+    assert merged == full
+
+
+def test_degradation_matrix_shared_evaluator(key):
+    """A pre-built gated evaluator reproduces the built-in path exactly
+    and is traced exactly once for the whole (mappings x layers) grid."""
+    params = _toy_params(key)
+    x = jax.random.normal(jax.random.fold_in(key, 29), (32, 6))
+    y = jax.random.randint(jax.random.fold_in(key, 30), (32,), 0, 3)
+    ens = V.sample_ensemble(key, 2, _toy_dims())
+    cfg = dataclasses.replace(rosa.RosaConfig(), mapping=Mapping.WS,
+                              noise=mrr.PAPER_NOISE)
+    engine = rosa.Engine(rosa.ExecutionPlan.build(cfg, None, ["a", "b"]))
+    traces = []
+
+    def counted(params, xc, e):
+        traces.append(1)
+        return _toy_apply(params, xc, e)
+
+    ev = ENS.make_plan_eval(counted, engine, ["a", "b"], eval_batch=16,
+                            gated=True)
+    deg = S.degradation_matrix(counted, params, x, y, ["a", "b"],
+                               rosa.RosaConfig(), ens, key, eval_batch=16,
+                               evaluator=ev)
+    # clean trace + one vmapped chip trace — 8 grid cells, ONE compile
+    assert len(traces) == 2
+    ref = S.degradation_matrix(_toy_apply, params, x, y, ["a", "b"],
+                               rosa.RosaConfig(), ens, key, eval_batch=16)
+    assert deg == ref
+    # the same executable also serves full-plan evaluation (g all-ones)
+    keys = jax.random.split(key, 2)
+    accs, agree, clean = ev(params, x, y, ens, keys,
+                            jnp.zeros(2), jnp.ones(2))
+    assert np.asarray(accs).shape == (2,)
+    assert len(traces) == 2                       # still no retrace

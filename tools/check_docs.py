@@ -1,0 +1,120 @@
+#!/usr/bin/env python
+"""Docs CI: validate internal links and run marked smoke commands.
+
+Two checks over ``docs/*.md`` (plus README.md for links into docs/):
+
+1. **Links** — every relative markdown link ``[..](path#anchor)`` must
+   point at an existing file, and when it carries an anchor into a
+   markdown file, at an existing heading (GitHub slug rules).  External
+   links (``http(s)://``, ``mailto:``) are ignored.
+
+2. **Smoke commands** — every fenced block whose info string is
+   ``bash docs-smoke`` is executed with ``bash -e`` from the repo root.
+   Documented commands that rot fail CI, not readers.
+
+Usage::
+
+    python tools/check_docs.py            # links + smoke commands
+    python tools/check_docs.py --no-run   # links only (fast)
+"""
+
+from __future__ import annotations
+
+import argparse
+import pathlib
+import re
+import subprocess
+import sys
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+
+# [text](target) — ignores images' leading "!" by matching the paren pair.
+_LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+_HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
+_FENCE_RE = re.compile(r"^```([^\n`]*)\n(.*?)^```", re.MULTILINE | re.DOTALL)
+
+
+def github_slug(heading: str) -> str:
+    """GitHub's anchor slug: lowercase, drop punctuation, spaces -> dashes."""
+    h = re.sub(r"[`*_]", "", heading.strip()).lower()
+    h = re.sub(r"[^\w\- ]", "", h)
+    return h.replace(" ", "-")
+
+
+def strip_code(text: str) -> str:
+    """Remove fenced code blocks so code samples never count as links."""
+    return _FENCE_RE.sub("", text)
+
+
+def check_links(doc: pathlib.Path) -> list[str]:
+    """All broken relative links/anchors in one markdown file."""
+    errors = []
+    text = doc.read_text()
+    for target in _LINK_RE.findall(strip_code(text)):
+        if re.match(r"^[a-z][a-z0-9+.-]*:", target):   # http:, mailto:, ...
+            continue
+        path_part, _, anchor = target.partition("#")
+        dest = doc if not path_part else (doc.parent / path_part).resolve()
+        if not dest.exists():
+            errors.append(f"{doc.relative_to(REPO)}: broken link -> {target}")
+            continue
+        if anchor and dest.suffix == ".md":
+            slugs = {github_slug(h) for h in _HEADING_RE.findall(
+                strip_code(dest.read_text()))}
+            if anchor not in slugs:
+                errors.append(f"{doc.relative_to(REPO)}: missing anchor "
+                              f"-> {target}")
+    return errors
+
+
+def smoke_blocks(doc: pathlib.Path) -> list[str]:
+    """The ``bash docs-smoke`` fenced blocks of one markdown file."""
+    return [body for info, body in _FENCE_RE.findall(doc.read_text())
+            if info.strip() == "bash docs-smoke"]
+
+
+def run_smoke(doc: pathlib.Path) -> list[str]:
+    """Execute each marked block; collect failures as error strings."""
+    errors = []
+    for i, block in enumerate(smoke_blocks(doc)):
+        label = f"{doc.relative_to(REPO)} smoke block #{i + 1}"
+        print(f"-- running {label}:\n{block.strip()}", flush=True)
+        proc = subprocess.run(["bash", "-e", "-c", block], cwd=REPO,
+                              capture_output=True, text=True, timeout=900)
+        if proc.returncode != 0:
+            tail = (proc.stdout + proc.stderr)[-2000:]
+            errors.append(f"{label}: exit {proc.returncode}\n{tail}")
+        else:
+            print(f"-- {label}: ok", flush=True)
+    return errors
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--no-run", action="store_true",
+                    help="skip executing docs-smoke blocks")
+    args = ap.parse_args(argv)
+
+    docs = sorted((REPO / "docs").glob("*.md"))
+    if not docs:
+        print("no docs/*.md found", file=sys.stderr)
+        return 1
+    readme = REPO / "README.md"
+    errors: list[str] = []
+    for doc in [*docs, *([readme] if readme.exists() else [])]:
+        errors += check_links(doc)
+    n_blocks = sum(len(smoke_blocks(d)) for d in docs)
+    if not args.no_run:
+        for doc in docs:
+            errors += run_smoke(doc)
+
+    if errors:
+        print("\n".join(["DOCS CHECK FAILED:", *errors]), file=sys.stderr)
+        return 1
+    print(f"docs check: {len(docs)} docs, {n_blocks} smoke blocks"
+          f"{' (not run)' if args.no_run else ''}, links ok")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
