@@ -16,6 +16,7 @@ with ``python -m repro.bench.compare benchmarks/baseline.json BENCH_<n>.json``.
 from __future__ import annotations
 
 import argparse
+import contextlib
 import datetime
 import platform
 import re
@@ -24,6 +25,7 @@ import time
 import traceback
 from pathlib import Path
 
+from repro import obs
 from repro.bench.schema import (BenchReport, BenchResult, Metric,
                                 next_bench_path, save)
 
@@ -291,6 +293,108 @@ def bench_serve_smoke(quick: bool) -> list[Metric]:
     return smoke_report(n_requests=24 if quick else 48)
 
 
+def _replay_cost_s(tracer, repeats: int) -> float:
+    """Best-of-N CPU cost of emitting exactly `tracer`'s event mix.
+
+    Replays the recorded phase sequence through the public tracer API
+    (reused span contexts, real clock reads — the same call shapes the
+    scheduler uses), so the measured loop is cost-equivalent to the
+    instrumentation that ran.  A few-ms tight loop min-of-N is stable to
+    ~1% even on a contended core, unlike end-to-end A/B at the same
+    scale."""
+    import time as _time
+
+    phases = [ev[0] if type(ev) is tuple else ev.get("ph", "i")
+              for ev in tracer._events]
+    best = float("inf")
+    for _ in range(repeats):
+        t2 = obs.Tracer()
+        sp = t2.span("serve.tick", "serve")
+        c0 = _time.process_time()
+        for ph in phases:
+            if ph == "X":
+                with sp:
+                    pass
+            elif ph == "C":
+                t2.counter("serve.queue_depth", 3)
+            elif ph == "b":
+                t2.async_begin("request", 7, cat="request", prompt_len=6)
+            elif ph == "e":
+                t2.async_end("request", 7, cat="request", tokens=9)
+            elif ph == "n":
+                t2.async_instant("admit", 7, cat="request", slot=1)
+            else:
+                t2.instant("x", "serve")
+        best = min(best, _time.process_time() - c0)
+    return best
+
+
+def bench_obs_overhead(quick: bool) -> list[Metric]:
+    """Tracing must be ~free: the gate rejects instrumentation creep in
+    the serving tick loop.
+
+    Direct on-vs-off A/B at the 2% level is UNMEASURABLE on a shared CI
+    core — even `process_time` of the same run swings >30% with neighbor
+    load — so the gated ratio decomposes the overhead into its stable
+    factors: (emission cost of exactly the run's event stream, replayed
+    as a tight min-of-N loop) over (best off-run CPU time).  The event
+    VOLUME is pinned separately by the exact `trace_events` gate, so
+    both instrument creep (more events) and emission-cost creep (slower
+    tracer) trip a gate.  The direct A/B CPU/wall numbers are still
+    reported, ungated, for humans.  The gated serve metrics must be
+    BIT-identical in both modes — observability may never change
+    scheduling or sampling."""
+    import time as _time
+
+    from repro.configs import get_smoke
+    from repro.serve import (Scheduler, ServeConfig, poisson_requests,
+                             report_metrics)
+
+    cfg = get_smoke("qwen3-32b")
+    scfg = ServeConfig(n_slots=4, max_len=56, prefill_chunk=8, seed=0)
+    sched = Scheduler(cfg, scfg, init_seed=0)
+    reqs = poisson_requests(96, 1.0, vocab=cfg.vocab, prompt_len=(4, 8),
+                            gen_len=(2, 40), seed=0)
+    with obs.tracing(None):
+        sched.run(reqs)                        # warmup: eat the compiles
+
+    repeats = 3 if quick else 5
+    off_cpu, on_cpu, off_walls, on_walls = [], [], [], []
+    rep_off = rep_on = tracer = None
+    for _ in range(repeats):
+        # interleaved off/on pairs: drift in machine load hits both sides
+        c0 = _time.process_time()
+        with obs.tracing(None):
+            rep_off = sched.run(reqs)
+        off_cpu.append(_time.process_time() - c0)
+        off_walls.append(rep_off.wall_s)
+        tracer = obs.Tracer()
+        c0 = _time.process_time()
+        with obs.tracing(tracer):
+            rep_on = sched.run(reqs)
+        on_cpu.append(_time.process_time() - c0)
+        on_walls.append(rep_on.wall_s)
+
+    emit_s = _replay_cost_s(tracer, repeats=15 if quick else 30)
+    ratio = 1.0 + emit_s / max(min(off_cpu), 1e-9)
+
+    def gated(rep):
+        return {m.name: m.value for m in report_metrics(rep) if m.gate}
+
+    return [
+        Metric("overhead_ratio", ratio, unit="x", gate=True, rel_tol=0.02,
+               direction="lower_is_better"),
+        Metric("gated_metrics_identical", int(gated(rep_off) == gated(rep_on)),
+               gate=True, rel_tol=0.0),
+        Metric("trace_events", len(tracer), gate=True, rel_tol=0.0),
+        Metric("emit_cost_s", emit_s, unit="s"),
+        Metric("cpu_off_s", min(off_cpu), unit="s"),
+        Metric("cpu_on_s", min(on_cpu), unit="s"),
+        Metric("wall_off_s", min(off_walls), unit="s"),
+        Metric("wall_on_s", min(on_walls), unit="s"),
+    ]
+
+
 def bench_roofline(quick: bool) -> list[Metric]:
     from benchmarks import roofline as R
     rows = [d for r in R.load("results/dryrun", "single")
@@ -316,6 +420,7 @@ BENCHES: dict[str, callable] = {
     "robust_smoke": bench_robust_smoke,
     "compile_cache": bench_compile_cache,
     "serve_smoke": bench_serve_smoke,
+    "obs_overhead": bench_obs_overhead,
     "roofline": bench_roofline,
 }
 
@@ -323,12 +428,35 @@ BENCHES: dict[str, callable] = {
 # ---------------------------------------------------------------------------
 # Runner
 # ---------------------------------------------------------------------------
-def run_benches(names: list[str], quick: bool) -> list[BenchResult]:
+_XLA_COUNTERS = ("xla.cache_hits", "xla.cache_misses", "xla.retraces",
+                 "xla.backend_compiles")
+
+
+def _xla_counts() -> dict[str, float]:
+    reg = obs.registry()
+    return {n: reg.counter(n).value for n in _XLA_COUNTERS}
+
+
+def run_benches(names: list[str], quick: bool,
+                trace_dir: Path | None = None) -> list[BenchResult]:
     results = []
     for name in names:
+        tracer = None
+        ctx = contextlib.nullcontext()
+        if trace_dir is not None:
+            tracer = obs.Tracer()
+            ctx = obs.tracing(tracer)
+        xla0 = _xla_counts()
         t0 = time.time()
         try:
-            metrics = BENCHES[name](quick)
+            with ctx:
+                metrics = BENCHES[name](quick)
+            # cache warmth recorded per entry (ungated): warm = hits > 0
+            # and no new backend compiles escaped the persistent cache
+            xla1 = _xla_counts()
+            metrics = metrics + [
+                Metric(f"{k.replace('.', '_')}", xla1[k] - xla0[k])
+                for k in _XLA_COUNTERS]
             res = BenchResult(name=name, status="ok",
                               wall_s=time.time() - t0, metrics=metrics)
         except SkipBench as e:
@@ -338,6 +466,9 @@ def run_benches(names: list[str], quick: bool) -> list[BenchResult]:
             res = BenchResult(name=name, status="failed",
                               wall_s=time.time() - t0,
                               error=traceback.format_exc(limit=8))
+        if tracer is not None and len(tracer):
+            trace_dir.mkdir(parents=True, exist_ok=True)
+            tracer.save(trace_dir / f"{name}.trace.json")
         results.append(res)
         tag = {"ok": "", "skipped": " [skipped]",
                "failed": " [FAILED]"}[res.status]
@@ -379,6 +510,9 @@ def main(argv: list[str] | None = None) -> int:
     ap.add_argument("--only", nargs="+", default=None,
                     choices=sorted(BENCHES),
                     help="run only these benches")
+    ap.add_argument("--trace-dir", default=None, metavar="DIR",
+                    help="write a Perfetto-loadable Chrome trace per "
+                         "bench into DIR")
     ap.add_argument("--list", action="store_true", help="list benches")
     args = ap.parse_args(argv)
     if args.list:
@@ -390,7 +524,10 @@ def main(argv: list[str] | None = None) -> int:
     quick = not args.full
     names = args.only if args.only else list(BENCHES)
     _enable_jax_compile_cache()
-    results = run_benches(names, quick)
+    obs.install_jax_hooks()      # XLA retrace/cache counters per bench
+    results = run_benches(
+        names, quick,
+        trace_dir=Path(args.trace_dir) if args.trace_dir else None)
 
     print("\n== summary ==")
     for r in results:

@@ -73,8 +73,20 @@ def _run_batch(args) -> None:
 
 def _run_stream(args) -> None:
     """Continuous-batching / one-shot serving over a synthetic stream."""
+    import contextlib
+
     from repro.serve import (Scheduler, ServeConfig, poisson_requests,
                              report_metrics)
+
+    tracer = None
+    ctx = contextlib.nullcontext()
+    if args.trace:
+        from repro import obs
+        obs.install_jax_hooks()
+        tracer = obs.Tracer()
+        # installed around construction too, so compile/autotune/plan-cache
+        # spans land in the same trace as the serving ticks
+        ctx = obs.tracing(tracer)
 
     cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
     scfg = ServeConfig(n_slots=args.n_slots, max_len=args.max_len,
@@ -84,18 +96,25 @@ def _run_stream(args) -> None:
     mesh = None
     if args.devices > 1:
         mesh = jax.make_mesh((args.devices,), ("data",))
-    sched = Scheduler(cfg, scfg, init_seed=args.seed, mesh=mesh)
-    print(f"arch={cfg.name} params={sched.bundle.n_params:,} "
-          f"slots={scfg.n_slots} max_len={scfg.max_len} "
-          f"chunk={scfg.prefill_chunk} policy={args.policy}"
-          + (f" mesh={args.devices}x data" if mesh else "")
-          + (" rosa" if args.rosa else ""))
+    with ctx:
+        sched = Scheduler(cfg, scfg, init_seed=args.seed, mesh=mesh)
+        print(f"arch={cfg.name} params={sched.bundle.n_params:,} "
+              f"slots={scfg.n_slots} max_len={scfg.max_len} "
+              f"chunk={scfg.prefill_chunk} policy={args.policy}"
+              + (f" mesh={args.devices}x data" if mesh else "")
+              + (" rosa" if args.rosa else ""))
 
-    reqs = poisson_requests(
-        args.requests, args.rate, vocab=cfg.vocab,
-        prompt_len=tuple(args.prompt_range), gen_len=tuple(args.gen_range),
-        seed=args.seed)
-    rep = sched.run(reqs, policy=args.policy)
+        reqs = poisson_requests(
+            args.requests, args.rate, vocab=cfg.vocab,
+            prompt_len=tuple(args.prompt_range),
+            gen_len=tuple(args.gen_range), seed=args.seed)
+        rep = sched.run(reqs, policy=args.policy)
+
+    if tracer is not None:
+        tracer.save(args.trace)
+        print(f"trace: {len(tracer)} events -> {args.trace} "
+              f"(load in https://ui.perfetto.dev, or summarize with "
+              f"`python -m repro.obs summarize {args.trace}`)")
 
     for m in report_metrics(rep):
         v = f"{m.value:.4g}" if isinstance(m.value, float) else m.value
@@ -135,6 +154,10 @@ def main() -> None:
                          "searched on the decode trace + energy ledger)")
     ap.add_argument("--variation-seed", type=int, default=None,
                     help="pin one sampled fabricated chip (repro.robust)")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="write a Perfetto-loadable Chrome trace of the "
+                         "run (compile + scheduler + request lifecycle + "
+                         "energy counters) to PATH")
     # batch policy
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)

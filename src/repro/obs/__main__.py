@@ -1,0 +1,7 @@
+"""Module entry point: ``python -m repro.obs summarize trace.json``."""
+
+import sys
+
+from repro.obs.cli import main
+
+sys.exit(main())

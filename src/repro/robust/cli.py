@@ -17,6 +17,7 @@ from repro.bench.schema import Metric
 from repro.core import mapping as M
 from repro.core import mrr
 from repro.core.constants import Mapping, ROSA_OPTIMAL
+from repro.obs import trace as obs
 from repro.robust import drift as D
 from repro.robust import ensemble as ENS
 from repro.robust import report as R
@@ -26,7 +27,8 @@ from repro.robust import variation as V
 
 def _trained(model: str, steps: int, seed: int = 0):
     from repro.training.cnn_train import train_cnn
-    return train_cnn(model, steps=steps, seed=seed)
+    with obs.span("robust.train", cat="robust", model=model, steps=steps):
+        return train_cnn(model, steps=steps, seed=seed)
 
 
 def _noisy_cfg(sigma_scale: float = 1.0) -> rosa.RosaConfig:
@@ -208,18 +210,20 @@ def run_smoke(model: str = "alexnet", *, steps: int = 40,
     zeros = jnp.zeros(len(names), dtype=jnp.float32)
 
     # --- ensemble: n_probe real forwards + control-variate prediction ---
-    ens = V.sample_ensemble(k_ens, n_chips, V.cnn_lane_dims(model),
-                            V.PAPER_VARIATION, antithetic=True)
-    probes = V.chip_slice(ens, n_probe)
-    keys_mc = jax.random.split(k_mc, n_chips)[:n_probe]
-    p_accs, p_agree, clean_acc = evaluator(params, x, yl, probes, keys_mc,
-                                           zeros, ones)
-    feats = ENS.surrogate_features(ENS.layer_weights(params, names), ens,
-                                   engine)
-    res_ens = ENS.EnsembleResult(
-        accs=ENS.control_variate_accs(np.asarray(p_accs), feats, n_probe),
-        agreement=np.asarray(p_agree), clean_acc=float(clean_acc),
-        n_probe=n_probe, method="control-variate")
+    with obs.span("robust.ensemble_probe", cat="robust", n_probe=n_probe):
+        ens = V.sample_ensemble(k_ens, n_chips, V.cnn_lane_dims(model),
+                                V.PAPER_VARIATION, antithetic=True)
+        probes = V.chip_slice(ens, n_probe)
+        keys_mc = jax.random.split(k_mc, n_chips)[:n_probe]
+        p_accs, p_agree, clean_acc = evaluator(params, x, yl, probes,
+                                               keys_mc, zeros, ones)
+        feats = ENS.surrogate_features(ENS.layer_weights(params, names),
+                                       ens, engine)
+        res_ens = ENS.EnsembleResult(
+            accs=ENS.control_variate_accs(np.asarray(p_accs), feats,
+                                          n_probe),
+            agreement=np.asarray(p_agree), clean_acc=float(clean_acc),
+            n_probe=n_probe, method="control-variate")
 
     # --- degradation matrix: PlanCache-backed, shared-compile cells ---
     cache = cache if cache is not None else rosa.PlanCache()
@@ -233,17 +237,21 @@ def run_smoke(model: str = "alexnet", *, steps: int = 40,
     matrix_cached = deg is not None and all(n in deg for n in names)
     if not matrix_cached:
         from repro.training.cnn_train import QAT_CFG
-        deg = S.degradation_matrix(apply_fn, params, x, yl, names, QAT_CFG,
-                                   probes, k_prof, evaluator=evaluator)
+        with obs.span("robust.degradation_matrix", cat="robust",
+                      layers=len(names)):
+            deg = S.degradation_matrix(apply_fn, params, x, yl, names,
+                                       QAT_CFG, probes, k_prof,
+                                       evaluator=evaluator)
         cache.store_matrix(mkey, deg)
 
     # --- plan search + final evaluations, same executable ---
     from repro.configs.paper_cnns import CNN_WORKLOADS
     rows = [l for l in CNN_WORKLOADS[model] if l.name in deg]
-    profiles = S.profile_layers_mc(rows, ROSA_OPTIMAL, deg, batch=128)
-    plan, search = S.searched_hybrid_plan(
-        profiles, apply_fn, params, x, yl, cfg_ws, probes, k_mc,
-        max_candidates=max_candidates, evaluator=evaluator)
+    with obs.span("robust.plan_search", cat="robust", layers=len(rows)):
+        profiles = S.profile_layers_mc(rows, ROSA_OPTIMAL, deg, batch=128)
+        plan, search = S.searched_hybrid_plan(
+            profiles, apply_fn, params, x, yl, cfg_ws, probes, k_mc,
+            max_candidates=max_candidates, evaluator=evaluator)
 
     keys_f = jax.random.split(k_mc, n_probe)
 
@@ -256,9 +264,10 @@ def run_smoke(model: str = "alexnet", *, steps: int = 40,
                                   agreement=np.asarray(agree),
                                   clean_acc=float(clean))
 
-    sel_h = [1.0 if plan.get(n) is Mapping.IS else 0.0 for n in names]
-    res_h = eval_sel(sel_h)
-    res_ws = eval_sel([0.0] * len(names))
+    with obs.span("robust.final_eval", cat="robust"):
+        sel_h = [1.0 if plan.get(n) is Mapping.IS else 0.0 for n in names]
+        res_h = eval_sel(sel_h)
+        res_ws = eval_sel([0.0] * len(names))
     gain = res_h.mean_acc - res_ws.mean_acc
     if gain < 0.0 and plan:
         # the search verified under the same evaluator and keys; a

@@ -40,6 +40,7 @@ import numpy as np
 
 from repro.core import mrr
 from repro.core.constants import Mapping
+from repro.obs import trace as obs
 from repro.rosa.backends import (DEFAULT, RosaConfig, condition_weight,
                                  rosa_matmul)
 from repro.rosa.ledger import EnergyLedger
@@ -243,6 +244,14 @@ class Engine:
         exactly in the caller's dtype.
         """
         cfg = self.plan.resolve(name)
+        if obs.enabled():
+            # fires at JAX trace time only — one instant per traced matmul,
+            # none per executed step — so the compile timeline shows every
+            # shape the engine routes (and which fall through to dense)
+            obs.instant("rosa.matmul", "compile", layer=name or "unnamed",
+                        m=int(np.prod(x.shape[:-1], dtype=np.int64)),
+                        k=int(x.shape[-1]), n=int(w.shape[-1]),
+                        dense=cfg is None)
         if cfg is None:
             return jnp.einsum("...k,kn->...n", x, w)
         if self.ledger is not None:

@@ -23,10 +23,16 @@ from __future__ import annotations
 
 import contextlib
 import dataclasses
+import itertools
 
 from repro.core import energy as E
 from repro.core.constants import ComputeMode, Mapping, OPEConfig
 from repro.rosa.backends import RosaConfig
+
+
+# process-wide record-order stamp; lets ledger events be aligned against
+# obs trace spans even when several ledgers interleave in one run
+_SEQ = itertools.count()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -41,6 +47,7 @@ class MatmulEvent:
     mode: ComputeMode
     backend: str
     tag: str = ""          # attribution scope (e.g. "prefill" / "decode")
+    seq: int = -1          # monotonic stamp assigned by EnergyLedger.record
 
     def layer_shape(self) -> E.LayerShape:
         """This event as an energy-model LayerShape."""
@@ -76,7 +83,7 @@ class EnergyLedger:
         self.events.append(MatmulEvent(
             name=name, m=m, k=k, n=n,
             mapping=cfg.mapping, mode=cfg.mode, backend=cfg.backend,
-            tag=self._tag))
+            tag=self._tag, seq=next(_SEQ)))
 
     def clear(self) -> None:
         """Drop every recorded event."""
@@ -173,7 +180,7 @@ class EnergyLedger:
             "events": [
                 {"name": ev.name, "m": ev.m, "k": ev.k, "n": ev.n,
                  "mapping": ev.mapping.value, "mode": ev.mode.value,
-                 "backend": ev.backend, "tag": ev.tag}
+                 "backend": ev.backend, "tag": ev.tag, "seq": ev.seq}
                 for ev in self.unique_events()
             ],
             "totals": bd.as_dict(),

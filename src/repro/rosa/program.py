@@ -49,6 +49,8 @@ import jax
 from repro.core import energy as E
 from repro.core import mapping as M
 from repro.core.constants import ComputeMode, OPEConfig, ROSA_OPTIMAL
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs
 from repro.rosa.engine import Engine, engine_context
 from repro.rosa.ledger import EnergyLedger
 from repro.rosa.plan import ExecutionPlan
@@ -147,8 +149,10 @@ def capture_trace(apply_fn: ApplyFn, engine: Engine,
         # shapes are key-independent, but the noisy realization path
         # refuses to trace without one — any key does for an abstract pass
         probe = probe.with_key(jax.random.PRNGKey(0))
-    with engine_context(probe):
-        jax.eval_shape(functools.partial(apply_fn, probe), *example_args)
+    with obs.span("rosa.capture_trace", cat="compile"):
+        with engine_context(probe):
+            jax.eval_shape(functools.partial(apply_fn, probe),
+                           *example_args)
     return ProgramTrace.from_ledger(recorder)
 
 
@@ -270,23 +274,31 @@ class PlanCache:
     def load(self, key: str) -> ExecutionPlan | None:
         """The cached plan under `key`, or None on miss/corruption."""
         path = self._path(key)
-        try:
-            doc = json.loads(path.read_text())
-            if doc.get("schema") != _CACHE_SCHEMA or doc.get("key") != key:
-                return None
-            return ExecutionPlan.from_json(doc["plan"])
-        except (OSError, json.JSONDecodeError, KeyError, TypeError,
-                ValueError):
-            # any unreadable/stale/torn entry is a miss, never a crash —
-            # the cold path re-searches and overwrites it
-            return None
+        with obs.span("plancache.load", cat="cache", key=key[:12]):
+            try:
+                doc = json.loads(path.read_text())
+                if doc.get("schema") != _CACHE_SCHEMA \
+                        or doc.get("key") != key:
+                    plan = None
+                else:
+                    plan = ExecutionPlan.from_json(doc["plan"])
+            except (OSError, json.JSONDecodeError, KeyError, TypeError,
+                    ValueError):
+                # any unreadable/stale/torn entry is a miss, never a crash
+                # — the cold path re-searches and overwrites it
+                plan = None
+        reg = obs_metrics.registry()
+        reg.counter("rosa.plancache_hits" if plan is not None
+                    else "rosa.plancache_misses").inc()
+        return plan
 
     def store(self, key: str, plan: ExecutionPlan,
               trace: ProgramTrace) -> pathlib.Path:
         """Atomically persist a searched plan under its content key."""
         doc = {"schema": _CACHE_SCHEMA, "key": key, "plan": plan.to_json(),
                "trace_fingerprint": trace.fingerprint}
-        return self._write(self._path(key), doc)
+        with obs.span("plancache.store", cat="cache", key=key[:12]):
+            return self._write(self._path(key), doc)
 
     def _write(self, path: pathlib.Path, doc: dict) -> pathlib.Path:
         self.root.mkdir(parents=True, exist_ok=True)
@@ -357,14 +369,23 @@ def _measured_matrix(src: DegradationSource, trace: ProgramTrace,
     re-attempted, and persists the extended store.
     """
     mkey = PlanCache.matrix_key(base_cfg, src.spec)
-    have = (store.load_matrix(mkey) if store is not None else None) or {}
+    with obs.span("degstore.load", cat="cache", key=mkey[:12]):
+        have = (store.load_matrix(mkey) if store is not None else None) \
+            or {}
     missing = [n for n in trace.names if n not in have]
+    reg = obs_metrics.registry()
+    reg.counter("rosa.degstore_layer_hits").inc(
+        len(trace.names) - len(missing))
+    reg.counter("rosa.degstore_layer_misses").inc(len(missing))
     if missing:
-        have = {**have, **src.measure(missing)}
+        with obs.span("rosa.degradation_measure", cat="compile",
+                      layers=len(missing)):
+            have = {**have, **src.measure(missing)}
         for n in missing:
             have.setdefault(n, {})
         if store is not None:
-            store.store_matrix(mkey, have)
+            with obs.span("degstore.store", cat="cache", key=mkey[:12]):
+                store.store_matrix(mkey, have)
     return {n: have[n] for n in trace.names if have.get(n)}
 
 
@@ -482,6 +503,7 @@ class Program:
 # ---------------------------------------------------------------------------
 # compile — trace once, autotune, freeze
 # ---------------------------------------------------------------------------
+@obs.traced("rosa.compile", cat="compile")
 def compile(apply_fn: ApplyFn, engine: Engine,
             example_args: Sequence[Any] = (), *,
             autotune: AutotuneConfig | None = None,
@@ -562,15 +584,19 @@ def compile(apply_fn: ApplyFn, engine: Engine,
                 matrix = deg
                 d_fn = lambda name, m: float(     # noqa: E731
                     matrix.get(name, {}).get(m.value, 0.0))
-            profiles = M.profile_layers_fast(
-                trace.layer_shapes(), autotune.ope, d_fn,
-                mode=autotune.mode, osa=autotune.osa, batch=autotune.batch)
-            if autotune.guard_pp is not None and deg is not None:
-                from repro.robust.sensitivity import accuracy_guarded_plan
-                mapping_plan = accuracy_guarded_plan(
-                    profiles, max_extra_pp=autotune.guard_pp)
-            else:
-                mapping_plan = M.hybrid_plan(profiles)
+            with obs.span("rosa.plan_search", cat="compile",
+                          layers=len(trace)):
+                profiles = M.profile_layers_fast(
+                    trace.layer_shapes(), autotune.ope, d_fn,
+                    mode=autotune.mode, osa=autotune.osa,
+                    batch=autotune.batch)
+                if autotune.guard_pp is not None and deg is not None:
+                    from repro.robust.sensitivity import \
+                        accuracy_guarded_plan
+                    mapping_plan = accuracy_guarded_plan(
+                        profiles, max_extra_pp=autotune.guard_pp)
+                else:
+                    mapping_plan = M.hybrid_plan(profiles)
             # open layer set: non-GEMM contractions (depthwise convs) and
             # names outside the trace still resolve to the base config
             plan = ExecutionPlan.from_mapping_plan(base_cfg, mapping_plan)
@@ -592,9 +618,10 @@ def compile(apply_fn: ApplyFn, engine: Engine,
             final = final.with_ledger(None)
         if final.key is None:
             final = final.with_key(jax.random.PRNGKey(0))  # same ledger obj
-        with engine_context(final):
-            jax.eval_shape(functools.partial(apply_fn, final),
-                           *example_args)
+        with obs.span("rosa.freeze", cat="compile"):
+            with engine_context(final):
+                jax.eval_shape(functools.partial(apply_fn, final),
+                               *example_args)
 
     program = Program(apply_fn, engine, trace,
                       donate_argnums=donate_argnums, searched=searched,

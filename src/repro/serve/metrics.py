@@ -166,6 +166,9 @@ def report_metrics(rep: ServeReport, prefix: str = "",
                direction="lower_is_better"),
         Metric(f"{p}tokens_per_s", rep.tokens_per_s, unit="tok/s"),
         Metric(f"{p}wall_s", rep.wall_s, unit="s"),
+        Metric(f"{p}ttft_p50_ms", rep.wall_percentile_ms(50, "ttft"),
+               unit="ms"),
+        Metric(f"{p}latency_p99_ms", rep.wall_percentile_ms(99), unit="ms"),
     ]
 
 

@@ -35,6 +35,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models.model import build_model
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs
 from repro.serve.config import ServeConfig, serving_model_config
 from repro.serve.decode import (PrefillTask, init_state, make_admit,
                                 make_admit_step, make_chunk_fn, make_evict,
@@ -66,8 +68,14 @@ class Completion:
     first_token_tick: int = -1
     admit_tick: int = -1
     done_tick: int = -1
-    done_wall: float = 0.0
     slot: int = -1
+    # wall-clock lifecycle stamps (perf_counter seconds relative to the
+    # run's t0) — recorded unconditionally; tick counters above remain the
+    # deterministic, machine-independent latency unit
+    enqueue_wall: float = 0.0
+    admit_wall: float = 0.0
+    first_token_wall: float = 0.0
+    done_wall: float = 0.0
 
     @property
     def ttft_ticks(self) -> int:
@@ -76,6 +84,16 @@ class Completion:
     @property
     def latency_ticks(self) -> int:
         return self.done_tick - self.arrival
+
+    @property
+    def ttft_s(self) -> float:
+        """Wall-clock time to first token (enqueue → prefill finished)."""
+        return self.first_token_wall - self.enqueue_wall
+
+    @property
+    def latency_s(self) -> float:
+        """Wall-clock end-to-end latency (enqueue → last token)."""
+        return self.done_wall - self.enqueue_wall
 
 
 @dataclasses.dataclass
@@ -124,6 +142,16 @@ class ServeReport:
 
     def percentile(self, q: float, kind: str = "latency") -> float:
         return float(np.percentile(self.latencies(kind), q))
+
+    def wall_latencies(self, kind: str = "latency") -> np.ndarray:
+        """Per-request wall-clock latencies [s]; kind is latency|ttft."""
+        vals = [getattr(c, f"{kind}_s") for c in self.completions.values()]
+        return np.asarray(sorted(vals), np.float64)
+
+    def wall_percentile_ms(self, q: float,
+                           kind: str = "latency") -> float:
+        """q-th percentile of the wall-clock latencies, in ms."""
+        return float(np.percentile(self.wall_latencies(kind), q) * 1e3)
 
 
 class Scheduler:
@@ -224,114 +252,189 @@ class Scheduler:
         rep = ServeReport(policy=policy, completions=completions,
                           n_slots=n_slots)
         tick = 0
+        # tracing is ambient and fixed for the run: resolve it once, keep
+        # the disabled path at one None check per emission site, and hoist
+        # every registry lookup out of the tick loop
+        tr = obs.current_tracer()
+        reg = obs_metrics.registry()
+        c_completed = reg.counter("serve.requests_completed")
+        c_evicted = reg.counter("serve.evictions")
+        g_depth = reg.gauge("serve.queue_depth")
+        g_active = reg.gauge("serve.slots_active")
+        last_depth = last_active = -1
+        null_span = contextlib.nullcontext()
+        # span contexts are stateless between uses — build the per-tick ones
+        # once and re-enter them, keeping the hot loop allocation-free
+        if tr is not None:
+            tick_ctx = tr.span("serve.tick", "serve")
+            prefill_ctx = tr.span("serve.prefill_chunk", "serve")
+            decode_ctx = tr.span("serve.decode_step", "serve")
+        else:
+            tick_ctx = prefill_ctx = decode_ctx = null_span
+        etrack = None
+        if tr is not None and self.engine is not None \
+                and self.engine.ledger is not None:
+            from repro.obs.energy import EnergyTrack
+            etrack = EnergyTrack(self.engine.ledger)
         t0 = time.perf_counter()
+
+        def finish(comp: Completion) -> None:
+            comp.done_tick = tick
+            comp.done_wall = time.perf_counter() - t0
+            c_completed.inc()
+            if tr is not None:
+                tr.async_end("request", comp.rid, cat="request",
+                             tokens=len(comp.tokens))
 
         with self._engine_ctx():
             while n_done < len(requests):
-                progressed = False
-                while pending and pending[0].arrival <= tick:
-                    prefill_q.append(pending.popleft())
+                with tick_ctx:
+                    progressed = False
+                    while pending and pending[0].arrival <= tick:
+                        r = pending.popleft()
+                        completions[r.rid].enqueue_wall = \
+                            time.perf_counter() - t0
+                        if tr is not None:
+                            tr.async_begin("request", r.rid, cat="request",
+                                           prompt_len=len(r.prompt))
+                        prefill_q.append(r)
 
-                # -- one prefill chunk per tick ---------------------------
-                if inflight is None and prefill_q:
-                    req = prefill_q.popleft()
-                    inflight = (req, PrefillTask(self.bundle, scfg,
-                                                 req.prompt, self.chunk_fn,
-                                                 self.whole_fn))
-                if inflight is not None:
-                    req, task = inflight
-                    with self._scope("prefill"):
-                        task.advance(self.params)
-                    rep.prefill_chunks += 1
-                    progressed = True
-                    if task.done:
-                        comp = completions[req.rid]
-                        tok0 = self.sample1(self.base_key, req.rid, 0,
-                                            task.logits, temp)
-                        comp.tokens.append(int(tok0))
-                        comp.first_token_tick = tick
-                        if scfg.collect_logits:
-                            comp.logits.append(np.asarray(task.logits))
-                        if req.max_new_tokens == 1:   # done at prefill
-                            comp.done_tick = tick
-                            comp.done_wall = time.perf_counter() - t0
-                            n_done += 1
-                        else:
-                            ready.append((req, task.cache, tok0))
-                        inflight = None
+                    # -- one prefill chunk per tick -----------------------
+                    if inflight is None and prefill_q:
+                        req = prefill_q.popleft()
+                        inflight = (req, PrefillTask(self.bundle, scfg,
+                                                     req.prompt,
+                                                     self.chunk_fn,
+                                                     self.whole_fn))
+                    if inflight is not None:
+                        req, task = inflight
+                        with prefill_ctx, self._scope("prefill"):
+                            task.advance(self.params)
+                        if etrack is not None:
+                            etrack.tick("prefill")
+                        rep.prefill_chunks += 1
+                        progressed = True
+                        if task.done:
+                            comp = completions[req.rid]
+                            tok0 = self.sample1(self.base_key, req.rid, 0,
+                                                task.logits, temp)
+                            comp.tokens.append(int(tok0))
+                            comp.first_token_tick = tick
+                            comp.first_token_wall = \
+                                time.perf_counter() - t0
+                            if tr is not None:
+                                tr.async_instant("first_token", req.rid,
+                                                 cat="request")
+                            if scfg.collect_logits:
+                                comp.logits.append(np.asarray(task.logits))
+                            if req.max_new_tokens == 1:  # done at prefill
+                                finish(comp)
+                                n_done += 1
+                            else:
+                                ready.append((req, task.cache, tok0))
+                            inflight = None
 
-                # -- admission -------------------------------------------
-                admit = self.null
-                if policy == "continuous":
-                    # refill rides inside the decode step: one per tick
-                    if ready and free:
-                        slot = heapq.heappop(free)
-                        req, cache0, tok0 = ready.popleft()
-                        admit = make_admit(cache0, slot, req.rid, tok0,
-                                           req.max_new_tokens)
-                        slot_rid[slot] = req.rid
-                        completions[req.rid].admit_tick = tick
-                        completions[req.rid].slot = slot
-                else:
-                    # oneshot: once the batch is idle and a full batch (or
-                    # everything that's left) is prefilled, admit it in one
-                    # burst, then decode until the whole batch drains
-                    outstanding = (len(pending) + len(prefill_q)
-                                   + len(ready)
-                                   + (1 if inflight is not None else 0))
-                    if (len(free) == n_slots and ready
-                            and (len(ready) >= min(n_slots, outstanding)
-                                 or (not pending and not prefill_q
-                                     and inflight is None))):
-                        while ready and free:
+                    # -- admission ---------------------------------------
+                    admit = self.null
+                    if policy == "continuous":
+                        # refill rides inside the decode step: one per tick
+                        if ready and free:
                             slot = heapq.heappop(free)
                             req, cache0, tok0 = ready.popleft()
-                            state = self.admit_step(
-                                state, make_admit(cache0, slot, req.rid,
-                                                  tok0, req.max_new_tokens))
+                            admit = make_admit(cache0, slot, req.rid, tok0,
+                                               req.max_new_tokens)
                             slot_rid[slot] = req.rid
-                            completions[req.rid].admit_tick = tick
-                            completions[req.rid].slot = slot
+                            self._mark_admit(completions[req.rid], slot,
+                                             tick, t0, tr)
+                    else:
+                        # oneshot: once the batch is idle and a full batch
+                        # (or everything that's left) is prefilled, admit
+                        # it in one burst, then decode until it drains
+                        outstanding = (len(pending) + len(prefill_q)
+                                       + len(ready)
+                                       + (1 if inflight is not None else 0))
+                        if (len(free) == n_slots and ready
+                                and (len(ready) >= min(n_slots, outstanding)
+                                     or (not pending and not prefill_q
+                                         and inflight is None))):
+                            while ready and free:
+                                slot = heapq.heappop(free)
+                                req, cache0, tok0 = ready.popleft()
+                                state = self.admit_step(
+                                    state,
+                                    make_admit(cache0, slot, req.rid, tok0,
+                                               req.max_new_tokens))
+                                slot_rid[slot] = req.rid
+                                self._mark_admit(completions[req.rid],
+                                                 slot, tick, t0, tr)
+                            progressed = True
+
+                    # -- one decode step for the whole batch -------------
+                    if any(r is not None for r in slot_rid):
+                        with decode_ctx, self._scope("decode"):
+                            state, out = self.step(self.params, state,
+                                                   admit, temp)
+                        if etrack is not None:
+                            etrack.tick("decode")
+                        rep.decode_steps += 1
                         progressed = True
+                        tok = np.asarray(out["token"])
+                        emitted = np.asarray(out["emitted"])
+                        done = np.asarray(out["done"])
+                        logits = (np.asarray(out["logits"])
+                                  if scfg.collect_logits else None)
+                        for s in range(n_slots):
+                            if not emitted[s]:
+                                continue
+                            comp = completions[slot_rid[s]]
+                            comp.tokens.append(int(tok[s]))
+                            if logits is not None:
+                                comp.logits.append(logits[s])
+                            if done[s]:
+                                finish(comp)
+                                n_done += 1
+                                slot_rid[s] = None
+                                heapq.heappush(free, s)
+                                if self.evict is not None:
+                                    c_evicted.inc()
+                                    state = self.evict(state, jnp.int32(s))
 
-                # -- one decode step for the whole batch -----------------
-                if any(r is not None for r in slot_rid):
-                    with self._scope("decode"):
-                        state, out = self.step(self.params, state, admit,
-                                               temp)
-                    rep.decode_steps += 1
-                    progressed = True
-                    tok = np.asarray(out["token"])
-                    emitted = np.asarray(out["emitted"])
-                    done = np.asarray(out["done"])
-                    logits = (np.asarray(out["logits"])
-                              if scfg.collect_logits else None)
-                    for s in range(n_slots):
-                        if not emitted[s]:
+                    if tr is not None:
+                        # counters sample on change only: Perfetto renders
+                        # steps, and a flat line is pure per-tick overhead
+                        depth = (len(pending) + len(prefill_q) + len(ready)
+                                 + (1 if inflight is not None else 0))
+                        active = sum(1 for r in slot_rid if r is not None)
+                        if depth != last_depth:
+                            last_depth = depth
+                            tr.counter("serve.queue_depth", depth)
+                            g_depth.set(depth)
+                        if active != last_active:
+                            last_active = active
+                            tr.counter("serve.slots_active", active)
+                            g_active.set(active)
+
+                    if not progressed:
+                        if pending:                 # idle: jump to arrival
+                            tick = pending[0].arrival
                             continue
-                        comp = completions[slot_rid[s]]
-                        comp.tokens.append(int(tok[s]))
-                        if logits is not None:
-                            comp.logits.append(logits[s])
-                        if done[s]:
-                            comp.done_tick = tick
-                            comp.done_wall = time.perf_counter() - t0
-                            n_done += 1
-                            slot_rid[s] = None
-                            heapq.heappush(free, s)
-                            if self.evict is not None:
-                                state = self.evict(state, jnp.int32(s))
-
-                if not progressed:
-                    if pending:                     # idle: jump to arrival
-                        tick = pending[0].arrival
-                        continue
-                    raise RuntimeError("scheduler deadlock")  # pragma: no cover
-                tick += 1
+                        raise RuntimeError(
+                            "scheduler deadlock")   # pragma: no cover
+                    tick += 1
 
         rep.ticks = tick
         rep.wall_s = time.perf_counter() - t0
         return rep
+
+    @staticmethod
+    def _mark_admit(comp: Completion, slot: int, tick: int, t0: float,
+                    tr) -> None:
+        """Stamp one request's admission (tick, wall, slot, trace)."""
+        comp.admit_tick = tick
+        comp.slot = slot
+        comp.admit_wall = time.perf_counter() - t0
+        if tr is not None:
+            tr.async_instant("admit", comp.rid, cat="request", slot=slot)
 
 
 def serving_program(bundle, scfg: ServeConfig, engine):
