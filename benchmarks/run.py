@@ -395,6 +395,118 @@ def bench_obs_overhead(quick: bool) -> list[Metric]:
     ]
 
 
+def bench_kernel_fusion(quick: bool) -> list[Metric]:
+    """Fused megakernel vs the composed chain on the smoke-arch decode
+    GEMMs (the serving hot path: slot-batch activations against qkv /
+    attn-out / mlp weights under paper noise, per-vector scales).
+
+    Gated metrics are deterministic: bit-level EnergyLedger pricing parity
+    (fusion is an execution detail — the analytic model must price both
+    identically), numeric parity inside the requant flip bound, and the
+    traced device-op ratio (one pallas_call + scale pre-pass vs the
+    composed quantize -> mrr chain -> per-plane OSA -> dequant graph) —
+    the HBM round-trip structure that makes fused <= composed a property
+    of the lowering, not of the host.  Wall times per decode step are
+    recorded ungated: on the CPU runner pallas executes in interpret mode,
+    so timing there would gate the interpreter, not the kernel."""
+    import dataclasses
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro import rosa
+    from repro.analysis import jaxprs as J
+    from repro.core import mrr
+    from repro.core.constants import ROSA_OPTIMAL
+    from repro.configs import get_smoke
+
+    cfg_m = get_smoke("qwen3-32b")
+    d, ff = cfg_m.d_model, (cfg_m.d_ff or 4 * cfg_m.d_model)
+    slots = 4
+    gemms = [("qkv", d, 3 * d), ("attn_out", d, d),
+             ("mlp_up", d, ff), ("mlp_down", ff, d)]
+    base = rosa.RosaConfig(noise=mrr.PAPER_NOISE, act_per_vector=True)
+    key = jax.random.PRNGKey(0)
+    xs = {k: jax.random.normal(jax.random.fold_in(key, i), (slots, k_dim))
+          for i, (k, k_dim, _) in enumerate(gemms)}
+    ws = {k: jax.random.normal(jax.random.fold_in(key, 100 + i),
+                               (k_dim, n_dim))
+          for i, (k, k_dim, n_dim) in enumerate(gemms)}
+
+    def make_step(backend: str):
+        cfg = dataclasses.replace(base, backend=backend)
+
+        def step(xs_, ws_, k_):
+            return {name: rosa.rosa_matmul(
+                xs_[name], ws_[name], cfg, jax.random.fold_in(k_, i))
+                for i, (name, _, _) in enumerate(gemms)}
+        return jax.jit(step)
+
+    def device_ops(fn) -> int:
+        """Top-level device ops of the traced step: recurse through call
+        wrappers but count a pallas_call as ONE launch (its body is one
+        kernel, not a graph of HBM round-trips)."""
+        def count(closed) -> int:
+            n = 0
+            for eqn in closed.jaxpr.eqns:
+                if eqn.primitive.name == "pallas_call":
+                    n += 1
+                    continue
+                subs = list(J.sub_jaxprs(eqn))
+                if subs:
+                    n += sum(count(s) for _, s in subs)
+                else:
+                    n += 1
+            return n
+        return count(jax.make_jaxpr(fn)(xs, ws, key))
+
+    steps = {b: make_step(b) for b in ("fused", "ref")}
+    ops = {b: device_ops(steps[b]) for b in steps}
+
+    # numeric parity inside the requant flip bound (the fused kernel's
+    # documented contract; tests/test_kernels.py::assert_quantized_parity)
+    y = {b: steps[b](xs, ws, key) for b in steps}
+    parity_ok = 1
+    for name, _, _ in gemms:
+        a = np.asarray(y["fused"][name], np.float64)
+        r = np.asarray(y["ref"][name], np.float64)
+        if np.max(np.abs(a - r)) / max(np.max(np.abs(r)), 1.0) > 2.0 / 127:
+            parity_ok = 0
+
+    # bit-level ledger pricing parity on the same traced decode workload
+    exports = {}
+    for b in steps:
+        ledger = rosa.EnergyLedger()
+        eng = rosa.Engine.from_config(
+            dataclasses.replace(base, backend=b), key=key, ledger=ledger)
+        jax.eval_shape(
+            lambda w_, x_: [eng.matmul(x_[n_], w_[n_], name=n_)
+                            for n_, _, _ in gemms], ws, xs)
+        exports[b] = ledger.export(ROSA_OPTIMAL)
+    edp_parity = int(exports["fused"]["totals"] == exports["ref"]["totals"])
+
+    def best_step_ms(fn) -> float:
+        jax.block_until_ready(fn(xs, ws, key))      # compile
+        best = float("inf")
+        for _ in range(3 if quick else 10):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn(xs, ws, key))
+            best = min(best, time.perf_counter() - t0)
+        return best * 1e3
+
+    return [
+        Metric("ledger_edp_parity", edp_parity, gate=True, rel_tol=0.0),
+        Metric("numeric_parity_ok", parity_ok, gate=True, rel_tol=0.0),
+        Metric("fused_device_ops", ops["fused"], gate=True, rel_tol=0.0),
+        Metric("composed_device_ops", ops["ref"], gate=True, rel_tol=0.0),
+        Metric("device_op_ratio", ops["fused"] / ops["ref"], unit="x",
+               gate=True, rel_tol=0.01, direction="lower_is_better"),
+        Metric("fused_step_ms", best_step_ms(steps["fused"]), unit="ms"),
+        Metric("composed_step_ms", best_step_ms(steps["ref"]), unit="ms"),
+    ]
+
+
 def bench_roofline(quick: bool) -> list[Metric]:
     from benchmarks import roofline as R
     rows = [d for r in R.load("results/dryrun", "single")
@@ -421,6 +533,7 @@ BENCHES: dict[str, callable] = {
     "compile_cache": bench_compile_cache,
     "serve_smoke": bench_serve_smoke,
     "obs_overhead": bench_obs_overhead,
+    "kernel_fusion": bench_kernel_fusion,
     "roofline": bench_roofline,
 }
 

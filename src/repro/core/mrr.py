@@ -107,6 +107,27 @@ class StaticVariation:
         return dataclasses.replace(self, ddt=self.ddt + offset)
 
 
+def expand_lanes(var: "StaticVariation | None", t):
+    """Adapt a chip's per-lane variation to an operand's orientation.
+
+    Convention: 1-D variation fields are per-reduction-lane (length K — one
+    entry per physical ring lane).  Against a (K, N) weight they gain a
+    trailing axis so lane k perturbs every output channel it is reused for;
+    against (M, K) activations they broadcast as-is.  Scalars and
+    full-shape fields pass through.
+    """
+    if var is None:
+        return None
+
+    def fix(a):
+        a = jnp.asarray(a)
+        if a.ndim == 1 and t.ndim == 2 and a.shape[0] == t.shape[0]:
+            return a[:, None]
+        return a
+
+    return StaticVariation(fix(var.dv), fix(var.ddt), fix(var.dlam))
+
+
 # --------------------------------------------------------------------------
 # Forward chain  V -> w
 # --------------------------------------------------------------------------

@@ -3,6 +3,14 @@
 # kernel. Leave this package empty if the paper has none.
 
 
+def on_tpu() -> bool:
+    """Whether the default jax backend is a real TPU (Pallas compiles
+    natively); every kernel wrapper keys interpret-mode fallback off this
+    ONE helper so a future backend rename is a one-line fix."""
+    import jax
+    return jax.default_backend() == "tpu"
+
+
 def tpu_compiler_params(**kwargs):
     """Pallas TPU CompilerParams across the jax rename (TPUCompilerParams
     in older releases).  Raises a descriptive error if neither exists."""

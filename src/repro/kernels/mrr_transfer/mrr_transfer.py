@@ -70,8 +70,12 @@ def mrr_transfer_pallas(w_target: jax.Array, eps_dac: jax.Array,
                         eps_th: jax.Array, *, sigma_dac: float = 0.02,
                         sigma_th: float = 0.04,
                         p: mrr.MRRParams = mrr.DEFAULT_PARAMS,
-                        block_rows: int = 256,
+                        block_rows: int = 8,
                         interpret: bool = False) -> jax.Array:
+    # block_rows default MUST stay equal to ops.preflight's — the analysis
+    # sweep prices the launched configuration, and the wrapper's noise-draw
+    # padding (rows_pad) depends on it.  tests/test_kernels.py pins all
+    # three defaults (kernel == wrapper == preflight) together.
     """2-D entry: (R, 128*k) tensors, R % block_rows == 0 (ops.py pads)."""
     rows, cols = w_target.shape
     assert rows % block_rows == 0, (rows, block_rows)

@@ -13,6 +13,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import mrr
+from repro.kernels import on_tpu
 from repro.kernels.mrr_transfer.mrr_transfer import mrr_transfer_pallas
 
 _LANE = 128
@@ -44,15 +45,20 @@ def preflight(n_elements: int, *, block_rows: int = 8) -> dict:
             "issues": issues}
 
 
-@functools.partial(jax.jit, static_argnames=("sigma_dac", "sigma_th", "p"))
+@functools.partial(jax.jit, static_argnames=("sigma_dac", "sigma_th", "p",
+                                             "block_rows"))
 def mrr_transfer(w_target: jax.Array, key: jax.Array,
                  sigma_dac: float = 0.02, sigma_th: float = 0.04,
-                 p: mrr.MRRParams = mrr.DEFAULT_PARAMS) -> jax.Array:
-    """Noisy MRR realization of target weights, any shape, any size."""
+                 p: mrr.MRRParams = mrr.DEFAULT_PARAMS,
+                 block_rows: int = 8) -> jax.Array:
+    """Noisy MRR realization of target weights, any shape, any size.
+
+    `block_rows` must match `preflight`'s default (pinned by tests): the
+    noise-draw padding below depends on it, so changing the launch tiling
+    changes which Gaussian each padded element receives."""
     shape = w_target.shape
     flat = w_target.reshape(-1)
     n = flat.shape[0]
-    block_rows = 8
     per_row = _LANE
     rows = -(-n // per_row)
     rows_pad = -(-rows // block_rows) * block_rows
@@ -63,5 +69,5 @@ def mrr_transfer(w_target: jax.Array, key: jax.Array,
     e_th = jax.random.normal(k2, flat.shape, flat.dtype)
     y = mrr_transfer_pallas(flat, e_dac, e_th, sigma_dac=sigma_dac,
                             sigma_th=sigma_th, p=p, block_rows=block_rows,
-                            interpret=jax.default_backend() != "tpu")
+                            interpret=not on_tpu())
     return y.reshape(-1)[:n].reshape(shape)

@@ -12,6 +12,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import quant as Q
+from repro.kernels import on_tpu
 from repro.kernels.osa_matmul.osa_matmul import osa_matmul_pallas
 
 
@@ -22,10 +23,6 @@ def _pad_to(x: jax.Array, mult: int, axis: int) -> jax.Array:
     widths = [(0, 0)] * x.ndim
     widths[axis] = (0, pad)
     return jnp.pad(x, widths)
-
-
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
 
 
 @functools.partial(jax.jit, static_argnames=("quant_bits", "pam_bits", "fused",
@@ -54,16 +51,19 @@ def osa_matmul(x: jax.Array, w: jax.Array, gains: jax.Array | None = None,
 
 
 def preflight(m: int, k: int, n: int, *, bm: int = 128, bn: int = 128,
-              bk: int = 128, n_planes: int = 7) -> dict:
+              bk: int = 128, quant_bits: int = 8, pam_bits: int = 1) -> dict:
     """Static tileability/VMEM report for an (m, k, n) GEMM — no launch.
 
     Mirrors exactly what `osa_matmul` would do with the shape: pad every
     dimension up to its block multiple, run a (m/bm, n/bn) grid with a
     k-step inner loop, and hold x/w blocks plus an f32 accumulator scratch
-    in VMEM (in/out blocks double-buffered by the pipeline).  `issues`
+    in VMEM (in/out blocks double-buffered by the pipeline).  The slot
+    count is derived from (quant_bits, pam_bits) exactly as `osa_matmul`
+    derives it, so the sweep prices what actually launches.  `issues`
     lists hard contract violations (block shapes the MXU tiling cannot
     accept); padding itself is legal but wasteful — `pad_waste` is the
     fraction of extra MACs the padding buys."""
+    n_planes = -(-Q.QuantConfig(bits=quant_bits).n_planes // pam_bits)
     issues: list[str] = []
     if min(m, k, n) <= 0 or min(bm, bn, bk) <= 0:
         issues.append(f"non-positive dimension in m,k,n={m},{k},{n} "
@@ -100,5 +100,5 @@ def osa_matmul_int(q: jax.Array, w: jax.Array, gains: jax.Array,
     wp = _pad_to(_pad_to(w.astype(jnp.float32), bk, 0), bn, 1)
     y = osa_matmul_pallas(qp, wp, gains.astype(jnp.float32),
                           n_planes=n_planes, fused=fused, bm=bm, bn=bn, bk=bk,
-                          interpret=not _on_tpu())
+                          interpret=not on_tpu())
     return y[:m, :n]

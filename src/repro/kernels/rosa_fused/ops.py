@@ -1,0 +1,250 @@
+"""Jitted public wrapper around the fused ROSA megakernel.
+
+Handles everything the tiled kernel cannot do locally, in the order the
+composed `rosa.backends` chain fixes:
+
+  * quantization full-scales — global (or per-row) absmax reductions,
+    computed here and streamed in as the (M, 3) scale operand.  The
+    requantization scale of the conditioned activations is obtained from a
+    cheap elementwise pre-pass over x (standard dynamic-quantization
+    practice); the O(T*M*K*N) contraction and both (K, N)/(M, K)
+    realizations stay fused in the kernel.
+  * PRNG discipline — the per-layer key splits exactly as `_forward`
+    does (mgate/ANALOG: (k_w, k_x); static WS: whole key to the weight
+    side; static IS: to the activation side), and each side's Gaussians
+    are drawn with `realize_weights`'s internal (DAC, thermal) split, so
+    the kernel sees bit-identical noise to the composed path.
+  * static variation — `StaticVariation` fields broadcast per orientation
+    (core.mrr.expand_lanes) and fold with the noise draws into the three
+    additive chain offsets the kernel consumes.
+  * padding to MXU-aligned block multiples + the unpadded-K bookkeeping
+    the kernel needs to mask analog-realized pad lanes.
+
+Static specialization (`realize_x`/`realize_w`) mirrors
+`_analog_operand`'s ideal shortcut: a side with ideal noise, no variation
+and no gate skips the chain entirely, so the ideal fused path matches the
+composed one with zero realization round-trip error.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import mrr, osa
+from repro.core import quant as Q
+from repro.core.constants import ComputeMode, Mapping
+from repro.kernels import on_tpu
+from repro.kernels.rosa_fused import ref
+from repro.kernels.rosa_fused.rosa_fused import rosa_fused_pallas
+from repro.obs import trace as obs
+
+
+def _pad_to(x: jax.Array, mult: int, axis: int) -> jax.Array:
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def _offsets(t: jax.Array, key: jax.Array | None, noise: mrr.NoiseModel,
+             var: mrr.StaticVariation | None):
+    """Fold per-shot draws + static variation into the three additive
+    offsets of the realization chain, broadcast to the operand's shape.
+
+    Draw discipline matches mrr.weight_of_voltage exactly: the side key
+    splits into (DAC, thermal) and each perturbation is sigma * N(0, 1).
+    """
+    if noise.is_ideal:
+        e_dac = e_th = jnp.zeros((), t.dtype)
+    else:
+        if key is None:
+            raise ValueError("noisy realization requires a PRNG key")
+        k_dac, k_th = jax.random.split(key)
+        e_dac = noise.sigma_dac * jax.random.normal(k_dac, t.shape, t.dtype)
+        e_th = noise.sigma_th * jax.random.normal(k_th, t.shape, t.dtype)
+    z = jnp.zeros((), t.dtype)
+    dv, ddt, dlam = ((var.dv, var.ddt, var.dlam) if var is not None
+                     else (z, z, z))
+    return tuple(jnp.broadcast_to(jnp.asarray(o, t.dtype), t.shape)
+                 for o in (e_dac + dv, e_th + ddt, dlam))
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "mapping", "mode", "quant_bits", "pam_bits", "act_per_vector", "noise",
+    "osa_cfg", "p", "bm", "bn", "bk"))
+def rosa_fused_matmul(x: jax.Array, w: jax.Array,
+                      key: jax.Array | None = None,
+                      var: mrr.StaticVariation | None = None,
+                      gate: jax.Array | None = None,
+                      mgate: jax.Array | None = None, *,
+                      mapping: Mapping = Mapping.WS,
+                      mode: ComputeMode = ComputeMode.MIXED,
+                      quant_bits: int = 8, pam_bits: int = 1,
+                      act_per_vector: bool = False,
+                      noise: mrr.NoiseModel = mrr.IDEAL,
+                      osa_cfg: osa.OSAConfig = osa.IDEAL_OSA,
+                      p: mrr.MRRParams = mrr.DEFAULT_PARAMS,
+                      bm: int = 128, bn: int = 128,
+                      bk: int = 128) -> jax.Array:
+    """y = x @ w through the fused analog pipeline; x: (M, K), w: (K, N).
+
+    Semantics are those of the composed `rosa.backends._forward` with the
+    "ref" contraction backend (the parity tests pin this); `gate`, `mgate`
+    and `var` leaves enter as kernel OPERANDS, so gated evaluators sweep
+    them without retracing.  Two contract caveats: (a) the kernel assumes
+    the quantizer's 1e-8 absmax floor never binds (operands whose global
+    absmax is below 1e-8 are a degenerate all-zero edge case); (b) the
+    in-kernel realization chain reorders float ops vs the composed path,
+    so a conditioned activation landing within float noise of a
+    requantization rounding boundary may flip one 8-bit code — each flip
+    moves that row's outputs by at most one requant LSB (the parity tests
+    assert this bound; see tests/test_kernels.py::assert_quantized_parity).
+    """
+    if mode is ComputeMode.DIGITAL:
+        raise ValueError("DIGITAL layers take the exact digital path; the "
+                         "fused kernel serves MIXED and ANALOG modes")
+    x = x.astype(jnp.float32)
+    w = w.astype(jnp.float32)
+    m, k = x.shape
+    _, n = w.shape
+    qcfg = Q.QuantConfig(bits=quant_bits)
+    analog = mode is ComputeMode.ANALOG
+    if analog:
+        mgate = None                 # _forward's ANALOG branch ignores it
+    use_mgate = mgate is not None
+    use_gate = gate is not None
+
+    # -- which sides realize (static; mirrors _analog_operand's shortcut) --
+    can_realize = not (noise.is_ideal and var is None and gate is None)
+    w_active = use_mgate or analog or mapping in (Mapping.WS, Mapping.GEMM)
+    x_active = use_mgate or analog or not w_active
+    realize_w = w_active and can_realize
+    realize_x = x_active and can_realize
+
+    # -- key split (must match _forward bit-for-bit) --
+    if use_mgate or analog:
+        k_w, k_x = (jax.random.split(key) if key is not None
+                    else (None, None))
+    elif w_active:
+        k_w, k_x = key, None
+    else:
+        k_w, k_x = None, key
+
+    # -- scales --
+    sw = Q.absmax_scale(w)
+    if analog:
+        sxd = sxa = s2 = Q.absmax_scale(x)
+    else:
+        sxd = Q.absmax_scale(x, act_per_vector)
+        sxa = Q.absmax_scale(x, True)
+        # requant scale of the CONDITIONED activations: a global reduction
+        # the tiled kernel cannot see — recompute the composed operand
+        # elementwise (ref.condition_x consumes the same k_x, so its noise
+        # draws are the kernel's) and take its absmax
+        x_eff_pre = ref.condition_x(
+            x, k_x, x_active=realize_x, use_mgate=use_mgate, mgate=mgate,
+            gate=gate, var=var, qcfg=qcfg, p=p,
+            noise=noise if realize_x else mrr.IDEAL,
+            act_per_vector=act_per_vector)
+        s2 = Q.absmax_scale(x_eff_pre, act_per_vector)
+
+    # -- noise/variation offsets per realized orientation --
+    x_off = (_offsets(x, k_x, noise, var) if realize_x else None)
+    w_off = (_offsets(w, k_w, noise, mrr.expand_lanes(var, w))
+             if realize_w else None)
+
+    # -- OSA slot gains (jitter needs a key the composed ref path never
+    # threads either — slot_jitter_sigma != 0 raises, same as _ref_backend)
+    if analog:
+        n_planes = 1
+        gains = jnp.ones((1,), jnp.float32)
+    else:
+        n_planes = -(-qcfg.n_planes // pam_bits)
+        gains = osa.slot_gains(
+            dataclasses.replace(osa_cfg, n_slots=n_planes,
+                                pam_bits=pam_bits), None, jnp.float32)
+
+    # -- pad + launch --
+    xp = _pad_to(_pad_to(x, bm, 0), bk, 1)
+    wp = _pad_to(_pad_to(w, bk, 0), bn, 1)
+    mp = xp.shape[0]
+
+    def col(s):
+        return jnp.broadcast_to(jnp.asarray(s, jnp.float32), (m, 1)) \
+            if jnp.ndim(s) == 0 else jnp.asarray(s, jnp.float32)
+
+    sx = jnp.concatenate([col(sxd), col(sxa), col(s2)], axis=1)
+    sx = jnp.pad(sx, ((0, mp - m), (0, 0)), constant_values=1.0)
+    z = jnp.float32(0.0)
+    gg = jnp.stack([jnp.asarray(gate, jnp.float32) if use_gate else z,
+                    jnp.asarray(mgate, jnp.float32) if use_mgate else z,
+                    jnp.asarray(sw, jnp.float32)])
+    if x_off is not None:
+        x_off = tuple(_pad_to(_pad_to(o, bm, 0), bk, 1) for o in x_off)
+    if w_off is not None:
+        w_off = tuple(_pad_to(_pad_to(o, bk, 0), bn, 1) for o in w_off)
+
+    if obs.enabled():
+        # trace-time only (the Engine.matmul pattern): one instant per
+        # traced fused launch, so compile timelines show ONE kernel where
+        # the composed path showed four device ops
+        obs.instant("kernels.rosa_fused", "compile", m=m, k=k, n=n,
+                    mapping=mapping.name, mode=mode.name,
+                    realize_x=realize_x, realize_w=realize_w,
+                    gated=use_gate, mapping_gated=use_mgate)
+
+    y = rosa_fused_pallas(
+        xp, wp, gains, sx, gg, x_off, w_off, analog=analog,
+        n_planes=n_planes, radix_bits=pam_bits, qmax=qcfg.qmax,
+        realize_x=realize_x, realize_w=realize_w, use_gate=use_gate,
+        use_mgate=use_mgate, k_real=k, p=p, bm=bm, bn=bn, bk=bk,
+        interpret=not on_tpu())
+    return y[:m, :n]
+
+
+def preflight(m: int, k: int, n: int, *, bm: int = 128, bn: int = 128,
+              bk: int = 128, quant_bits: int = 8, pam_bits: int = 1,
+              realize_x: bool = True, realize_w: bool = True) -> dict:
+    """Static tileability/VMEM report for a fused (m, k, n) GEMM — no launch.
+
+    Mirrors `rosa_fused_matmul`'s layout: pad every dimension to its block
+    multiple, run an (m/bm, n/bn) grid with a k-step inner loop, and hold
+    the x/w blocks, the per-row scale and gate operands, three offset
+    streams per realized side, and the f32 accumulator scratch in VMEM
+    (in/out blocks double-buffered by the pipeline).  Defaults price the
+    worst-case launch (both orientations realized — the mapping-gate
+    superposition the analysis sweep must budget for)."""
+    n_planes = -(-Q.QuantConfig(bits=quant_bits).n_planes // pam_bits)
+    issues: list[str] = []
+    if min(m, k, n) <= 0 or min(bm, bn, bk) <= 0:
+        issues.append(f"non-positive dimension in m,k,n={m},{k},{n} "
+                      f"bm,bn,bk={bm},{bn},{bk}")
+        return {"kernel": "rosa_fused", "grid": (0, 0, 0), "vmem_bytes": 0,
+                "pad_waste": 0.0, "issues": issues}
+    # f32 min tile is (8, 128): sublane dims % 8, lane dims % 128
+    if bm % 8:
+        issues.append(f"bm={bm} not a multiple of 8 (f32 sublane tile)")
+    if bk % 128:
+        issues.append(f"bk={bk} not a multiple of 128 (x-block lane dim)")
+    if bn % 128:
+        issues.append(f"bn={bn} not a multiple of 128 (w-block lane dim)")
+    mp = -(-m // bm) * bm
+    kp = -(-k // bk) * bk
+    np_ = -(-n // bn) * bn
+    grid = (mp // bm, np_ // bn, kp // bk)
+    x_streams = 1 + 3 * realize_x            # x + its offset operands
+    w_streams = 1 + 3 * realize_w            # w + its offset operands
+    vmem = 4 * (2 * (x_streams * bm * bk + w_streams * bk * bn)
+                + 2 * (3 * bm + 3)           # scale + gate operands (dbuf)
+                + 2 * bm * bn                # double-buffered out block
+                + bm * bn                    # accumulator scratch
+                + n_planes)                  # slot gains
+    pad_waste = (mp * kp * np_) / (m * k * n) - 1.0
+    return {"kernel": "rosa_fused", "grid": grid, "vmem_bytes": vmem,
+            "pad_waste": pad_waste, "issues": issues}

@@ -1,0 +1,132 @@
+"""Pure-jnp oracle for the fused ROSA megakernel.
+
+Replicates, from `repro.core` primitives only, exactly what the composed
+`rosa.backends._forward` pipeline computes with the "ref" contraction
+backend: operand conditioning (digital EO path / noisy analog realization /
+gate blend / mapping-gate superposition) followed by the OSA reference
+matmul.  The kernel wrapper (ops.py) also reuses `condition_x` to obtain
+the requantization full-scale — a global reduction the tiled kernel cannot
+see — so the scale the kernel dequantizes by is bit-identical to the one
+the composed chain would use.
+
+Key discipline matches `_forward`: with a mapping gate (or in ANALOG mode)
+the caller's key splits into (k_w, k_x); static WS sends the whole key to
+the weight side, static IS to the activation side.  `realize_weights`
+splits each side's key into (DAC, thermal) draws internally, so the
+wrapper's pre-drawn offsets consume the same Gaussians bit-for-bit.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import mrr, osa
+from repro.core import quant as Q
+from repro.core.constants import ComputeMode, Mapping
+
+
+def analog_operand(t: jax.Array, key: jax.Array | None, *,
+                   qcfg: Q.QuantConfig, p: mrr.MRRParams,
+                   noise: mrr.NoiseModel, var: mrr.StaticVariation | None,
+                   gate: jax.Array | None, clean_per_vector: bool,
+                   noisy_per_vector: bool) -> jax.Array:
+    """rosa.backends._analog_operand with the per-vector flags explicit."""
+    clean = Q.fake_quant(t, qcfg, per_vector=clean_per_vector)
+    if noise.is_ideal and var is None and gate is None:
+        return clean
+    scale = Q.absmax_scale(t, noisy_per_vector)
+    q = Q.fake_quant(t / scale, qcfg)
+    noisy = mrr.realize_weights(q, key, p, noise, var) * scale
+    if gate is None:
+        return noisy
+    return clean + gate * (noisy - clean)
+
+
+def condition_x(x: jax.Array, key: jax.Array | None, *,
+                x_active: bool, use_mgate: bool,
+                mgate: jax.Array | None, gate: jax.Array | None,
+                var: mrr.StaticVariation | None, qcfg: Q.QuantConfig,
+                p: mrr.MRRParams, noise: mrr.NoiseModel,
+                act_per_vector: bool) -> jax.Array:
+    """The MIXED-mode activation operand exactly as `_forward` builds it."""
+    x_dig = Q.fake_quant(x, qcfg, per_vector=act_per_vector)
+    if use_mgate:
+        x_is = analog_operand(x, key, qcfg=qcfg, p=p, noise=noise, var=var,
+                              gate=gate, clean_per_vector=act_per_vector,
+                              noisy_per_vector=True)
+        return (1.0 - mgate) * x_dig + mgate * x_is
+    if x_active:
+        return analog_operand(x, key, qcfg=qcfg, p=p, noise=noise, var=var,
+                              gate=gate, clean_per_vector=act_per_vector,
+                              noisy_per_vector=True)
+    return x_dig
+
+
+def condition_w(w: jax.Array, key: jax.Array | None, *,
+                w_active: bool, use_mgate: bool,
+                mgate: jax.Array | None, gate: jax.Array | None,
+                var: mrr.StaticVariation | None, qcfg: Q.QuantConfig,
+                p: mrr.MRRParams, noise: mrr.NoiseModel) -> jax.Array:
+    """The MIXED-mode weight operand exactly as `_forward` builds it."""
+    if use_mgate:
+        w_ws = analog_operand(w, key, qcfg=qcfg, p=p, noise=noise,
+                              var=mrr.expand_lanes(var, w), gate=gate,
+                              clean_per_vector=False, noisy_per_vector=False)
+        return (1.0 - mgate) * w_ws + mgate * Q.fake_quant(w, qcfg)
+    if w_active:
+        return analog_operand(w, key, qcfg=qcfg, p=p, noise=noise,
+                              var=mrr.expand_lanes(var, w), gate=gate,
+                              clean_per_vector=False, noisy_per_vector=False)
+    return Q.fake_quant(w, qcfg)
+
+
+def rosa_fused_ref(x: jax.Array, w: jax.Array, key: jax.Array | None = None,
+                   var: mrr.StaticVariation | None = None,
+                   gate: jax.Array | None = None,
+                   mgate: jax.Array | None = None, *,
+                   mapping: Mapping = Mapping.WS,
+                   mode: ComputeMode = ComputeMode.MIXED,
+                   quant_bits: int = 8, pam_bits: int = 1,
+                   act_per_vector: bool = False,
+                   noise: mrr.NoiseModel = mrr.IDEAL,
+                   osa_cfg: osa.OSAConfig = osa.IDEAL_OSA,
+                   p: mrr.MRRParams = mrr.DEFAULT_PARAMS) -> jax.Array:
+    """Composed quantize -> realize -> OSA -> dequantize chain, the oracle
+    the fused kernel is fuzz-tested against (same split as `_forward` with
+    the "ref" backend)."""
+    qcfg = Q.QuantConfig(bits=quant_bits)
+    use_mgate = mgate is not None and mode is ComputeMode.MIXED
+    if mode is ComputeMode.ANALOG:
+        k_w, k_x = (jax.random.split(key) if key is not None
+                    else (None, None))
+        w_eff = analog_operand(w, k_w, qcfg=qcfg, p=p, noise=noise,
+                               var=mrr.expand_lanes(var, w), gate=gate,
+                               clean_per_vector=False,
+                               noisy_per_vector=False)
+        x_eff = analog_operand(x, k_x, qcfg=qcfg, p=p, noise=noise, var=var,
+                               gate=gate, clean_per_vector=False,
+                               noisy_per_vector=False)
+        return x_eff @ w_eff
+    if mode is not ComputeMode.MIXED:
+        raise ValueError(f"unsupported mode for the fused path: {mode}")
+    w_active = use_mgate or mapping in (Mapping.WS, Mapping.GEMM)
+    x_active = use_mgate or not w_active
+    if use_mgate:
+        k_w, k_x = (jax.random.split(key) if key is not None
+                    else (None, None))
+    elif w_active:
+        k_w, k_x = key, None
+    else:
+        k_w, k_x = None, key
+    w_eff = condition_w(w, k_w, w_active=w_active, use_mgate=use_mgate,
+                        mgate=mgate, gate=gate, var=var, qcfg=qcfg, p=p,
+                        noise=noise)
+    x_eff = condition_x(x, k_x, x_active=x_active, use_mgate=use_mgate,
+                        mgate=mgate, gate=gate, var=var, qcfg=qcfg, p=p,
+                        noise=noise, act_per_vector=act_per_vector)
+    return osa.osa_matmul_ref(
+        x_eff, w_eff, dataclasses.replace(osa_cfg, pam_bits=pam_bits),
+        qcfg, per_vector=act_per_vector)

@@ -13,6 +13,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import on_tpu
 from repro.kernels.ssd_scan.ssd_scan import ssd_scan_pallas
 
 
@@ -77,7 +78,7 @@ def ssd_scan(x: jax.Array, loga: jax.Array, b: jax.Array, c: jax.Array,
         cf = jnp.pad(cf, ((0, 0), (0, pad), (0, 0)))
 
     y, sf = ssd_scan_pallas(xf, lf, bf, cf, chunk=chunk,
-                            interpret=jax.default_backend() != "tpu")
+                            interpret=not on_tpu())
     y = y[:, :l].reshape(bsz, h, l, p).transpose(0, 2, 1, 3)
     sf = sf.reshape(bsz, h, s_dim, p)
     return y, sf

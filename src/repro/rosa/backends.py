@@ -72,19 +72,27 @@ DEFAULT = RosaConfig()
 # ---------------------------------------------------------------------------
 # Backend registry
 # ---------------------------------------------------------------------------
-# A backend contracts noise-placed operands: (x_eff (M,K), w_eff (K,N),
-# cfg: RosaConfig | None) -> (M,N).  cfg is None on the Engine's non-optical
-# (plain dense) layers.
-Backend = Callable[[jax.Array, jax.Array, "RosaConfig | None"], jax.Array]
+# Two backend classes share the registry:
+#   * contraction backends (the default) take noise-placed operands:
+#     (x_eff (M,K), w_eff (K,N), cfg: RosaConfig | None) -> (M,N);
+#   * RAW backends (`raw=True`) replace the whole conditioning+contraction
+#     pipeline: (x, w, cfg, *, key, var, gate, mgate) -> (M,N).  The fused
+#     megakernel is raw — quantize/realize/OSA/dequant happen inside one
+#     pallas_call, so _forward must hand it the UNconditioned operands.
+Backend = Callable[..., jax.Array]
 
 _BACKENDS: dict[str, Backend] = {}
+_RAW_BACKENDS: set[str] = set()
 
 
-def register_backend(name: str):
-    """Decorator: register a contraction backend under `name`."""
+def register_backend(name: str, raw: bool = False):
+    """Decorator: register a backend under `name` (`raw=True` for backends
+    that fuse operand conditioning into the contraction)."""
     def deco(fn: Backend) -> Backend:
         """Register `fn` under `name` and return it unchanged."""
         _BACKENDS[name] = fn
+        if raw:
+            _RAW_BACKENDS.add(name)
         return fn
     return deco
 
@@ -94,10 +102,21 @@ def backend_names() -> list[str]:
     return sorted(_BACKENDS)
 
 
+def is_raw_backend(name: str) -> bool:
+    """Whether `name` registered as a raw (fully-fused) backend."""
+    return name in _RAW_BACKENDS
+
+
 def resolve_backend(name: str) -> tuple[str, Backend]:
-    """Resolve a backend name ("auto" -> platform pick) to (name, fn)."""
+    """Resolve a backend name ("auto" -> platform pick) to (name, fn).
+
+    On TPU "auto" picks the fused megakernel (ONE pallas_call for the
+    whole analog pipeline — ROADMAP's single biggest raw-speed lever);
+    elsewhere the pure-jnp composed reference.  The ideal-QAT shortcut in
+    `_forward` still short-circuits before any backend runs.
+    """
     if name == "auto":
-        name = "pallas" if jax.default_backend() == "tpu" else "ref"
+        name = "fused" if jax.default_backend() == "tpu" else "ref"
     try:
         return name, _BACKENDS[name]
     except KeyError:
@@ -124,6 +143,21 @@ def _pallas_backend(x: jax.Array, w: jax.Array, cfg: RosaConfig) -> jax.Array:
     return osa_ops.osa_matmul(x, w, quant_bits=cfg.quant_bits,
                               pam_bits=cfg.pam_bits,
                               per_vector=cfg.act_per_vector)
+
+
+@register_backend("fused", raw=True)
+def _fused_backend(x: jax.Array, w: jax.Array, cfg: RosaConfig, *,
+                   key=None, var=None, gate=None, mgate=None) -> jax.Array:
+    # deferred import: pulls in jax.experimental.pallas only when routed here
+    from repro.kernels.rosa_fused import ops as fused_ops
+    # decomposition radix follows osa_cfg (what the composed ref chain
+    # uses), NOT RosaConfig.pam_bits (which only the per-op pallas backend
+    # reads) — the fused path must price and compute like the chain it fuses
+    return fused_ops.rosa_fused_matmul(
+        x, w, key, var, gate, mgate, mapping=cfg.mapping, mode=cfg.mode,
+        quant_bits=cfg.quant_bits, pam_bits=cfg.osa_cfg.pam_bits,
+        act_per_vector=cfg.act_per_vector, noise=cfg.noise,
+        osa_cfg=cfg.osa_cfg, p=cfg.mrr_params)
 
 
 # ---------------------------------------------------------------------------
@@ -159,24 +193,9 @@ def _digital_path(t: jax.Array, cfg: RosaConfig,
     return quant.fake_quant(t, cfg.qcfg, per_vector=per_vector)
 
 
-def _expand_lanes(var: mrr.StaticVariation | None, t: jax.Array):
-    """Adapt a chip's per-lane variation to the operand orientation.
-
-    Convention: 1-D variation fields are per-reduction-lane (length K — one
-    entry per physical ring lane).  Against a (K, N) weight they gain a
-    trailing axis so lane k perturbs every output channel it is reused for;
-    against (M, K) activations they broadcast as-is.  Scalars and
-    full-shape fields pass through.
-    """
-    if var is None:
-        return None
-    def fix(a):
-        """Broadcast a per-channel array against the target's layout."""
-        a = jnp.asarray(a)
-        if a.ndim == 1 and t.ndim == 2 and a.shape[0] == t.shape[0]:
-            return a[:, None]
-        return a
-    return mrr.StaticVariation(fix(var.dv), fix(var.ddt), fix(var.dlam))
+# orientation-aware variation broadcast now lives in core (the fused kernel
+# wrapper needs the identical convention); keep the historic private name.
+_expand_lanes = mrr.expand_lanes
 
 
 def realization_rms_error(t: jax.Array, cfg: RosaConfig,
@@ -253,6 +272,10 @@ def _forward(x: jax.Array, w: jax.Array, cfg: RosaConfig,
             return _digital_path(x, cfg, cfg.act_per_vector) \
                 @ _digital_path(w, cfg)
         bname, contract = resolve_backend(cfg.backend)
+        if bname in _RAW_BACKENDS:
+            # fully-fused pipeline: conditioning happens inside the kernel
+            return contract(x, w, cfg, key=key, var=var, gate=gate,
+                            mgate=mgate)
         if mgate is not None:
             # mapping superposition: realize BOTH orientations and blend the
             # OPERANDS by the traced selector (exact for mgate in {0, 1}) —
@@ -275,6 +298,12 @@ def _forward(x: jax.Array, w: jax.Array, cfg: RosaConfig,
             x_eff = _analog_operand(x, cfg, key, var, gate, per_vector=True)
         return contract(x_eff, w_eff, cfg)
     elif cfg.mode is ComputeMode.ANALOG:
+        bname, contract = resolve_backend(cfg.backend)
+        if bname in _RAW_BACKENDS:
+            # single-shot analog readout, fused end to end (mgate is
+            # ignored in ANALOG mode, matching the composed branch below)
+            return contract(x, w, cfg, key=key, var=var, gate=gate,
+                            mgate=None)
         if key is not None:
             k_w, k_x = jax.random.split(key)
         else:

@@ -16,11 +16,16 @@ try:                      # degrade gracefully: property tests fall back to
 except ModuleNotFoundError:
     hp = st = None
 
-from repro.core import mrr, quant
+from repro.core import mrr, osa, quant
+from repro.core.constants import ComputeMode, Mapping
+from repro.kernels.mrr_transfer import mrr_transfer as mt_kernel
 from repro.kernels.mrr_transfer import ops as mt_ops
 from repro.kernels.mrr_transfer import ref as mt_ref
 from repro.kernels.osa_matmul import ops as osa_ops
 from repro.kernels.osa_matmul.ref import osa_matmul_ref
+from repro.kernels.rosa_fused import ops as fused_ops
+from repro.kernels.rosa_fused import ref as fused_ref
+from repro.kernels.rosa_fused import rosa_fused as fused_kernel
 from repro.kernels.ssd_scan import ops as ssd_ops
 from repro.kernels.ssd_scan import ref as ssd_ref
 
@@ -184,6 +189,163 @@ else:
         (129, 3, 0.02, 0.04), (700, 4, 0.01, 0.02)])
     def test_mrr_noisy_parity_property(n, seed, sd, sth):
         _check_mrr_noisy_parity(n, seed, sd, sth)
+
+
+# ---------------------------------------------------------------------------
+# rosa_fused megakernel vs the composed-chain oracle
+# ---------------------------------------------------------------------------
+# A pinned non-ideal environment exercising every fused stage at once:
+# per-shot DAC/thermal noise, static chip variation (a per-lane dv field),
+# and OSA chain non-idealities.  Individual knobs zero out per-case below.
+_F_NOISE = mrr.PAPER_NOISE
+_F_OSA = osa.OSAConfig(splitter_imbalance=0.01, odl_loss_db_per_stage=0.05)
+
+
+def _f_var(k_dim: int, seed: int) -> mrr.StaticVariation:
+    dv = 0.01 * jax.random.normal(jax.random.PRNGKey(seed ^ 0xA5), (k_dim,))
+    return mrr.StaticVariation(dv=dv, ddt=jnp.float32(0.05),
+                               dlam=jnp.float32(1e-4))
+
+
+def assert_quantized_parity(y, y_ref, *, qmax: int = 127,
+                            tight: float = 2e-4) -> None:
+    """Parity assertion for two implementations of the same quantized
+    pipeline computed in different float op orders.
+
+    The fused kernel re-derives the realization chain with noise/variation
+    folded into additive offsets, so a conditioned activation can differ
+    from the composed chain's by ~1 ulp; when such a value lands within
+    float noise of a requantization rounding boundary its 8-bit code flips
+    by ONE.  A flip moves every output of that activation row by at most
+    one requant LSB (~1/qmax of the output's full scale).  So: the bulk
+    must match at float-accumulation tightness, deviations may never
+    exceed the one-LSB bound, and flipped rows must stay rare."""
+    y = np.asarray(y, np.float64).reshape(-1, y.shape[-1])
+    r = np.asarray(y_ref, np.float64).reshape(y.shape)
+    scale = max(float(np.max(np.abs(r))), 1.0)
+    d = np.abs(y - r) / scale
+    assert d.max() <= 2.0 / qmax, \
+        f"deviation {d.max():.2e} exceeds the one-LSB flip bound"
+    bad_rows = int((d.max(axis=-1) > tight).sum())
+    allowed = max(2, -(-y.shape[0] // 4))
+    assert bad_rows <= allowed, \
+        (f"{bad_rows} rows (of {y.shape[0]}) beyond the tight tolerance — "
+         "more than requant boundary flips can explain")
+
+
+def _check_fused_parity(m: int, k: int, n: int, seed: int, *,
+                        mapping=Mapping.WS, mode=ComputeMode.MIXED,
+                        apv: bool = False, noisy: bool = True,
+                        with_var: bool = True, gate=None, mgate=None,
+                        pam_bits: int = 1, osa_cfg=_F_OSA) -> None:
+    """Fused kernel == composed quantize->realize->OSA->dequant oracle.
+
+    Same key in, bit-identical noise draws by contract — tolerances are
+    the flip-aware quantized-parity discipline (see
+    assert_quantized_parity)."""
+    kx, kw, kn = jax.random.split(jax.random.PRNGKey(seed), 3)
+    x = jax.random.normal(kx, (m, k))
+    w = jax.random.normal(kw, (k, n))
+    noise = _F_NOISE if noisy else mrr.IDEAL
+    var = _f_var(k, seed) if with_var else None
+    kwargs = dict(mapping=mapping, mode=mode, noise=noise,
+                  act_per_vector=apv, pam_bits=pam_bits, osa_cfg=osa_cfg)
+    y = fused_ops.rosa_fused_matmul(x, w, kn, var, gate, mgate,
+                                    bm=8, bn=128, bk=128, **kwargs)
+    y_ref = fused_ref.rosa_fused_ref(x, w, kn, var, gate, mgate, **kwargs)
+    assert_quantized_parity(y, y_ref)
+
+
+_FUSED_CASES = [
+    # (m, k, n, seed, kwargs) — mappings x per-vector x gates x non-ideal
+    (8, 16, 8, 0, {}),
+    (12, 70, 33, 1, {"mapping": Mapping.IS}),
+    (12, 70, 33, 2, {"mapping": Mapping.IS, "apv": True}),
+    (9, 130, 40, 3, {"apv": True}),                 # K pad lanes masked
+    (17, 128, 5, 4, {"noisy": False}),              # variation-only realize
+    (8, 32, 8, 5, {"noisy": False, "with_var": False}),   # ideal shortcut
+    (9, 33, 8, 6, {"gate": 0.3}),
+    (16, 48, 24, 7, {"mgate": 0.5, "apv": True}),   # mapping superposition
+    (8, 40, 16, 8, {"mode": ComputeMode.ANALOG}),
+    (8, 40, 16, 9, {"mode": ComputeMode.ANALOG, "gate": 0.7}),
+    (8, 24, 8, 10, {"pam_bits": 2}),                # PAM-4 digits
+]
+
+
+@pytest.mark.parametrize("m,k,n,seed,kwargs", _FUSED_CASES)
+def test_fused_matches_composed_chain(m, k, n, seed, kwargs):
+    _check_fused_parity(m, k, n, seed, **kwargs)
+
+
+if hp is not None:
+    @hp.given(st.integers(1, 24), st.integers(1, 150), st.integers(1, 16),
+              st.sampled_from([Mapping.WS, Mapping.IS]), st.booleans(),
+              st.booleans(), st.integers(0, 2 ** 16))
+    @hp.settings(max_examples=8, deadline=None)
+    def test_fused_parity_property(m, k, n, mapping, apv, with_var, seed):
+        _check_fused_parity(m, k, n, seed, mapping=mapping, apv=apv,
+                            with_var=with_var)
+
+    @hp.given(st.integers(1, 16), st.integers(1, 140), st.integers(1, 12),
+              st.integers(0, 2 ** 16))
+    @hp.settings(max_examples=4, deadline=None)
+    def test_fused_analog_parity_property(m, k, n, seed):
+        _check_fused_parity(m, k, n, seed, mode=ComputeMode.ANALOG)
+else:
+    @pytest.mark.parametrize("m,k,n,mapping,apv,with_var,seed", [
+        (1, 1, 1, Mapping.WS, False, True, 0),
+        (7, 129, 3, Mapping.IS, True, True, 1),
+        (24, 64, 16, Mapping.WS, True, False, 2),
+        (16, 150, 9, Mapping.IS, False, True, 3)])
+    def test_fused_parity_property(m, k, n, mapping, apv, with_var, seed):
+        _check_fused_parity(m, k, n, seed, mapping=mapping, apv=apv,
+                            with_var=with_var)
+
+    @pytest.mark.parametrize("m,k,n,seed", [(1, 1, 1, 0), (9, 140, 7, 1)])
+    def test_fused_analog_parity_property(m, k, n, seed):
+        _check_fused_parity(m, k, n, seed, mode=ComputeMode.ANALOG)
+
+
+def test_fused_rejects_digital_mode(key):
+    x = jax.random.normal(key, (8, 16))
+    with pytest.raises(ValueError, match="DIGITAL"):
+        fused_ops.rosa_fused_matmul(x, x.T @ x, mode=ComputeMode.DIGITAL)
+
+
+# ---------------------------------------------------------------------------
+# preflight defaults == launch defaults (all four kernels)
+# ---------------------------------------------------------------------------
+def _defaults(fn) -> dict:
+    import inspect
+    return {name: p.default for name, p in
+            inspect.signature(fn).parameters.items()
+            if p.default is not inspect.Parameter.empty}
+
+
+@pytest.mark.parametrize("preflight,launchers,shared", [
+    (osa_ops.preflight, [osa_ops.osa_matmul],
+     ("bm", "bn", "bk", "quant_bits", "pam_bits")),
+    (mt_ops.preflight, [mt_ops.mrr_transfer, mt_kernel.mrr_transfer_pallas],
+     ("block_rows",)),
+    (ssd_ops.preflight, [ssd_ops.ssd_scan], ("chunk",)),
+    (fused_ops.preflight, [fused_ops.rosa_fused_matmul],
+     ("bm", "bn", "bk", "quant_bits", "pam_bits")),
+], ids=["osa_matmul", "mrr_transfer", "ssd_scan", "rosa_fused"])
+def test_preflight_defaults_match_kernel_defaults(preflight, launchers,
+                                                  shared):
+    """The analysis sweep must price the launch configuration that actually
+    runs: every default a preflight shares with its wrapper/kernel is
+    pinned equal (the mrr_transfer block_rows=8 vs 256 drift hid wrong
+    VMEM/grid numbers behind a green check)."""
+    pre = _defaults(preflight)
+    for launcher in launchers:
+        got = _defaults(launcher)
+        for name in shared:
+            assert name in pre and name in got, \
+                f"{launcher.__name__} lost shared default {name!r}"
+            assert pre[name] == got[name], \
+                (f"preflight default {name}={pre[name]} disagrees with "
+                 f"{launcher.__name__}'s {name}={got[name]}")
 
 
 # ---------------------------------------------------------------------------
