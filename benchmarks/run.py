@@ -293,6 +293,19 @@ def bench_serve_smoke(quick: bool) -> list[Metric]:
     return smoke_report(n_requests=24 if quick else 48)
 
 
+def bench_drift_serve(quick: bool) -> list[Metric]:
+    """Closed-loop drift-adaptive serving A/B (repro.serve.adaptive): one
+    Poisson stream served twice under the same seeded sine drift schedule
+    — uncontrolled vs detect/re-trim/re-plan controller with a forced
+    mid-stream Program swap.  Gates: the controller recovers >= 80% of the
+    uncontrolled accuracy loss, drops zero requests, keeps every request
+    finished before its first action bit-exact with the uncontrolled run,
+    and the double-buffered swap costs zero ticks of downtime."""
+    from repro.serve.adaptive import drift_serve_metrics
+    _, metrics = drift_serve_metrics(quick=quick)
+    return metrics
+
+
 def _replay_cost_s(tracer, repeats: int) -> float:
     """Best-of-N CPU cost of emitting exactly `tracer`'s event mix.
 
@@ -532,6 +545,7 @@ BENCHES: dict[str, callable] = {
     "robust_smoke": bench_robust_smoke,
     "compile_cache": bench_compile_cache,
     "serve_smoke": bench_serve_smoke,
+    "drift_serve": bench_drift_serve,
     "obs_overhead": bench_obs_overhead,
     "kernel_fusion": bench_kernel_fusion,
     "roofline": bench_roofline,

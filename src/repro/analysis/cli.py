@@ -125,6 +125,15 @@ def serving_targets(arch: str) -> list[AnalysisTarget]:
             program, (params, _abstract_decode_batch(bundle.cfg, scfg)),
             name=pre + "program"),
     ]
+    # the adaptive controller's drift step: the decode step with one extra
+    # traced residual scalar — must stay as pure/donating as the base step
+    from repro.serve.adaptive import make_drift_step
+    targets.append(AnalysisTarget(
+        name=pre + "drift_step",
+        fn=make_drift_step(bundle, scfg, program),
+        example_args=(params, state, admit, temp,
+                      jax.ShapeDtypeStruct((), jnp.float32)),
+        donate_argnums=(1,), hot_path=True))
     if bundle.cfg.family not in ("ssm", "hybrid"):
         targets.append(AnalysisTarget(
             name=pre + "chunk_fn",

@@ -56,6 +56,38 @@ class DriftModel:
             return self.amp_k * walk / max(np.sqrt(len(t) - 1), 1.0)
         raise ValueError(f"unknown drift kind {self.kind!r}")
 
+    def offsets_at(self, t, key: jax.Array | None = None,
+                   t_grid=None) -> jax.Array:
+        """Jit-compatible single-timestep d(t): a traceable scalar (or
+        batch) instead of the materialized numpy grid of `offsets`.
+
+        `sine` and `linear` are closed-form.  `walk` is path-dependent, so
+        it additionally needs the `key` and the (static-shape) `t_grid`
+        the walk is defined on: the step table is rebuilt with jnp ops
+        bit-compatible with `offsets` and linearly interpolated at `t`
+        (exact on grid points).  The in-loop serving controller queries
+        this once per tick; `tests/test_adaptive.py` pins parity with the
+        grid path for all three kinds.
+        """
+        t = jnp.asarray(t)
+        if self.kind == "sine":
+            return self.amp_k * jnp.sin(2.0 * jnp.pi * t / self.period_s)
+        if self.kind == "linear":
+            return self.amp_k * t / self.period_s
+        if self.kind == "walk":
+            if key is None:
+                raise ValueError("random-walk drift requires a PRNG key")
+            if t_grid is None:
+                raise ValueError(
+                    "random-walk drift is path-dependent: offsets_at needs "
+                    "the t_grid the walk is defined on")
+            grid = jnp.asarray(t_grid, dtype=jnp.float32)
+            n = int(grid.shape[0])
+            steps = jax.random.normal(key, (n,)).at[0].set(0.0)
+            table = self.amp_k * jnp.cumsum(steps) / max(np.sqrt(n - 1), 1.0)
+            return jnp.interp(t, grid, table)
+        raise ValueError(f"unknown drift kind {self.kind!r}")
+
 
 def trim_voltages(w_target, dt_known, p: mrr.MRRParams = mrr.DEFAULT_PARAMS):
     """Re-invoke the programming calibration against a measured thermal

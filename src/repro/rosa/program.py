@@ -250,11 +250,22 @@ class PlanCache:
     the workload or the search inputs misses the cache and re-searches;
     identical inputs hit and load the identical plan.  Writes are
     atomic-rename so concurrent compiles never observe torn files.
+
+    `max_entries` bounds the store: after every write the oldest-mtime
+    entries beyond the bound are unlinked (plan and degradation files
+    count alike).  Loads touch their entry's mtime, so eviction is LRU,
+    not FIFO — months-long adaptive serving keeps its hot plans while the
+    cache stays bounded.  `python -m repro.rosa stats|gc` inspects and
+    prunes a store offline.
     """
 
-    def __init__(self, root: str | os.PathLike | None = None):
+    def __init__(self, root: str | os.PathLike | None = None,
+                 max_entries: int | None = None):
+        if max_entries is not None and max_entries < 1:
+            raise ValueError("max_entries must be >= 1")
         self.root = pathlib.Path(root) if root is not None \
             else default_cache_dir()
+        self.max_entries = max_entries
 
     def _path(self, key: str) -> pathlib.Path:
         return self.root / f"{key}.json"
@@ -287,6 +298,8 @@ class PlanCache:
                 # any unreadable/stale/torn entry is a miss, never a crash
                 # — the cold path re-searches and overwrites it
                 plan = None
+        if plan is not None:
+            self._touch(path)
         reg = obs_metrics.registry()
         reg.counter("rosa.plancache_hits" if plan is not None
                     else "rosa.plancache_misses").inc()
@@ -298,7 +311,67 @@ class PlanCache:
         doc = {"schema": _CACHE_SCHEMA, "key": key, "plan": plan.to_json(),
                "trace_fingerprint": trace.fingerprint}
         with obs.span("plancache.store", cat="cache", key=key[:12]):
-            return self._write(self._path(key), doc)
+            path = self._write(self._path(key), doc)
+        self.gc()
+        return path
+
+    @staticmethod
+    def _touch(path: pathlib.Path) -> None:
+        """Bump an entry's mtime on a hit: mtime IS the LRU clock."""
+        with contextlib.suppress(OSError):
+            os.utime(path)
+
+    def _entries(self) -> list[pathlib.Path]:
+        """Every persisted entry (plans AND degradation stores), LRU
+        first: eviction order for `gc`, listing order for `stats`."""
+        try:
+            files = [p for p in self.root.iterdir()
+                     if p.suffix == ".json" and p.is_file()]
+        except OSError:
+            return []
+        def mtime(p: pathlib.Path) -> float:
+            try:
+                return p.stat().st_mtime
+            except OSError:       # racing eviction/cleanup: sort last
+                return float("inf")
+        return sorted(files, key=lambda p: (mtime(p), p.name))
+
+    def gc(self, max_entries: int | None = None) -> int:
+        """Evict least-recently-used entries beyond the bound; returns the
+        eviction count.  `max_entries=None` uses the instance bound (and
+        is a no-op when the instance is unbounded)."""
+        bound = self.max_entries if max_entries is None else max_entries
+        if bound is None:
+            return 0
+        if bound < 1:
+            raise ValueError("max_entries must be >= 1")
+        entries = self._entries()
+        evicted = 0
+        for path in entries[:max(len(entries) - bound, 0)]:
+            with contextlib.suppress(OSError):
+                path.unlink()
+                evicted += 1
+        if evicted:
+            obs_metrics.registry().counter(
+                "rosa.plancache_evictions").inc(evicted)
+        return evicted
+
+    def stats(self) -> dict:
+        """JSON-able store summary (the `python -m repro.rosa stats` view)."""
+        entries = self._entries()
+        plans = [p for p in entries if not p.name.endswith(".deg.json")]
+        sizes = []
+        for p in entries:
+            with contextlib.suppress(OSError):
+                sizes.append(p.stat().st_size)
+        return {"root": str(self.root),
+                "entries": len(entries),
+                "plans": len(plans),
+                "matrices": len(entries) - len(plans),
+                "bytes": sum(sizes),
+                "max_entries": self.max_entries,
+                "lru": [p.name for p in entries[:3]],
+                "mru": [p.name for p in entries[-3:]]}
 
     def _write(self, path: pathlib.Path, doc: dict) -> pathlib.Path:
         self.root.mkdir(parents=True, exist_ok=True)
@@ -331,21 +404,26 @@ class PlanCache:
 
     def load_matrix(self, key: str) -> dict | None:
         """The cached `{layer: {mapping: pp}}` rows, or None on any miss."""
+        path = self._matrix_path(key)
         try:
-            doc = json.loads(self._matrix_path(key).read_text())
+            doc = json.loads(path.read_text())
             if doc.get("schema") != _CACHE_SCHEMA or doc.get("key") != key:
                 return None
             layers = doc["layers"]
-            return {str(n): {str(m): float(v) for m, v in row.items()}
+            rows = {str(n): {str(m): float(v) for m, v in row.items()}
                     for n, row in layers.items()}
         except (OSError, json.JSONDecodeError, KeyError, TypeError,
                 ValueError, AttributeError):
             return None
+        self._touch(path)
+        return rows
 
     def store_matrix(self, key: str, layers: dict) -> pathlib.Path:
         """Atomically persist (or extend) a degradation-matrix store."""
         doc = {"schema": _CACHE_SCHEMA, "key": key, "layers": layers}
-        return self._write(self._matrix_path(key), doc)
+        path = self._write(self._matrix_path(key), doc)
+        self.gc()
+        return path
 
 
 def _resolve_cache(cache) -> PlanCache | None:

@@ -20,6 +20,12 @@ scheduler-driven serving stack:
 Sampling keys fold (request id, token index) from one base seed, so a
 request's stream is invariant to scheduling — the property that makes
 serving testable at all.
+
+`repro.serve.adaptive` closes the drift loop on top of this stack: a
+`TickHook` injects per-tick thermal residuals into the decode step, and a
+probe/detector/controller pipeline re-trims or re-plans the serving
+`rosa.Program` mid-traffic without dropping requests (see
+docs/adaptive-serving.md).
 """
 
 from repro.serve.config import ServeConfig, serving_model_config
@@ -30,14 +36,15 @@ from repro.serve.decode import (DecodeState, PrefillTask, init_state,
 from repro.serve.loadgen import poisson_requests
 from repro.serve.metrics import (build_serving_engine, energy_metrics,
                                  report_metrics, smoke_report)
-from repro.serve.scheduler import (Completion, Request, Scheduler,
-                                   ServeReport, run_sequential)
+from repro.serve.scheduler import (Completion, EmptyStat, Request,
+                                   Scheduler, ServeReport, TickHook,
+                                   run_sequential)
 
 __all__ = [
-    "Completion", "DecodeState", "PrefillTask", "Request", "Scheduler",
-    "ServeConfig", "ServeReport", "build_serving_engine", "energy_metrics",
-    "init_state", "make_admit", "make_admit_step", "make_chunk_fn",
-    "make_evict", "make_serve_step", "null_admit", "poisson_requests",
-    "report_metrics", "run_sequential", "sample_token",
-    "serving_model_config", "smoke_report",
+    "Completion", "DecodeState", "EmptyStat", "PrefillTask", "Request",
+    "Scheduler", "ServeConfig", "ServeReport", "TickHook",
+    "build_serving_engine", "energy_metrics", "init_state", "make_admit",
+    "make_admit_step", "make_chunk_fn", "make_evict", "make_serve_step",
+    "null_admit", "poisson_requests", "report_metrics", "run_sequential",
+    "sample_token", "serving_model_config", "smoke_report",
 ]

@@ -1,0 +1,31 @@
+"""Closed-loop drift-adaptive serving: detect → re-trim → re-plan.
+
+The serving fleet's chip drifts thermally mid-traffic; this package keeps
+it accurate without dropping a request.  Golden-token probes piggyback on
+idle decode slots (`probes`), EWMA/CUSUM statistics decide when drift is
+real (`detector`), and a HEALTHY→DEGRADED→RETRIM→REPLAN state machine
+first re-trims the ring voltages at the estimated temperature, then — if
+accuracy stays below guard — re-selects the hybrid plan and swaps the
+serving `rosa.Program` double-buffered between ticks (`controller`).
+`scenario` is the A/B harness and `python -m repro.serve.adaptive` the
+CLI; `docs/adaptive-serving.md` walks through the whole loop.
+"""
+
+from repro.serve.adaptive.controller import (AdaptiveController,
+                                             ControllerConfig,
+                                             ControllerState, DriftMonitor,
+                                             make_drift_step)
+from repro.serve.adaptive.detector import DetectorConfig, DriftDetector
+from repro.serve.adaptive.probes import ProbeConfig, ProbeSet, plan_selector
+from repro.serve.adaptive.scenario import (DriftEnv, ScenarioConfig,
+                                           ScenarioResult,
+                                           drift_serve_metrics,
+                                           run_scenario)
+
+__all__ = [
+    "AdaptiveController", "ControllerConfig", "ControllerState",
+    "DetectorConfig", "DriftDetector", "DriftEnv", "DriftMonitor",
+    "ProbeConfig", "ProbeSet", "ScenarioConfig", "ScenarioResult",
+    "drift_serve_metrics", "make_drift_step", "plan_selector",
+    "run_scenario",
+]

@@ -1,0 +1,75 @@
+"""CLI: `python -m repro.serve.adaptive [--kind sine|linear|walk] ...`
+
+Runs one drift-serving A/B (uncontrolled monitor vs closed-loop
+controller over the same request stream and compiled step) and prints the
+scenario summary; `--json` saves a BENCH-schema report, `--trace` a
+Chrome trace of the whole run (controller spans included).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.serve.adaptive",
+        description="closed-loop drift-adaptive serving scenario")
+    ap.add_argument("--kind", default="sine",
+                    choices=("sine", "linear", "walk"))
+    ap.add_argument("--amp-k", type=float, default=1.2,
+                    help="peak thermal offset [K]")
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--rate", type=float, default=0.5)
+    ap.add_argument("--period-ticks", type=float, default=64.0)
+    ap.add_argument("--probe-every", type=int, default=4)
+    ap.add_argument("--force-replan-at", type=int, default=None,
+                    help="deterministically trigger a plan swap at a tick")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--json", default=None, help="write a BENCH report")
+    ap.add_argument("--trace", default=None, help="write a Chrome trace")
+    args = ap.parse_args(argv)
+
+    import contextlib
+
+    from repro.obs import trace as obs
+    from repro.serve.adaptive.scenario import ScenarioConfig, run_scenario
+
+    cfg = ScenarioConfig(kind=args.kind, amp_k=args.amp_k,
+                         n_requests=args.requests, rate=args.rate,
+                         period_ticks=args.period_ticks,
+                         probe_every=args.probe_every,
+                         force_replan_at=args.force_replan_at,
+                         seed=args.seed)
+    tracer = obs.Tracer() if args.trace else None
+    ctx = obs.tracing(tracer) if tracer is not None \
+        else contextlib.nullcontext()
+    with ctx:
+        res, reqs = run_scenario(cfg)
+    if tracer is not None:
+        tracer.save(args.trace)
+        print(f"trace -> {args.trace}")
+
+    s = res.summary()
+    s["dropped_requests"] = res.dropped_requests(reqs)
+    print(f"drift={cfg.kind} amp={cfg.amp_k}K  "
+          f"requests={cfg.n_requests}  probes every {cfg.probe_every} ticks")
+    for k, v in s.items():
+        print(f"  {k:24s} {v}")
+    if args.json:
+        import time
+
+        from repro.bench.schema import BenchResult, save_report
+        from repro.serve.adaptive.scenario import drift_serve_metrics
+        t0 = time.perf_counter()
+        _, metrics = drift_serve_metrics(quick=True)
+        save_report([BenchResult(name="drift_serve",
+                                 wall_s=time.perf_counter() - t0,
+                                 metrics=metrics)], args.json)
+        print(f"report -> {args.json}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

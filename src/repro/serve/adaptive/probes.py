@@ -1,0 +1,158 @@
+"""Golden-token drift probes: cheap accuracy telemetry for the controller.
+
+A probe is a tiny fixed batch of deterministic prompts run through the
+serving model's prefill forward under the CURRENT thermal residual, scored
+as argmax agreement against the GOLDEN reference: this chip, zero drift,
+the fixed probe noise key — i.e. the fleet's behavior at calibration time.
+(The clean no-chip reference would charge the probe for static fabrication
+variation the controller cannot act on; against golden, agreement is
+exactly 1.0 at zero residual and decays only with drift.)  The evaluator
+is `robust.ensemble.make_plan_eval` verbatim — the same one-hot-gate
+shared program that backs the sensitivity degradation matrix — so one
+compile serves every probe use:
+
+  * plain health probe        sel = current plan, g = all-ones
+  * per-layer localization    g one-hot (which layer is melting?)
+  * replan measurement        (sel, g one-hot) grid -> degradation rows
+                              in the exact `{layer: {mapping: pp}}` format
+                              `rosa.compile(degradation=...)` consumes
+
+The residual offset, the mapping selector and the analog gates are all
+TRACED arguments, so the controller probes every few ticks without ever
+retracing.  Probes run with the ledger detached: telemetry forwards must
+not pollute the serving energy accounting.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.constants import Mapping
+from repro.robust import variation as V
+from repro.robust.ensemble import (chunk_eval_set, chunked_argmax_preds,
+                                   make_plan_eval)
+from repro.rosa.engine import engine_context
+
+# same floor the sensitivity matrix applies: a measured-zero row must not
+# make a mapping look infinitely safe to the accuracy-aware plan search
+_ROW_FLOOR = 1e-3
+
+
+@dataclasses.dataclass(frozen=True)
+class ProbeConfig:
+    """Probe batch shape + determinism knobs (frozen, hashable)."""
+
+    n_probes: int = 8      # prompts per probe batch
+    prompt_len: int = 6    # tokens per prompt
+    seed: int = 2024       # prompt content + per-probe noise keys
+
+
+def plan_selector(engine, names) -> jnp.ndarray:
+    """The current plan as a mapping-gate vector (1 = IS, else WS-side)."""
+    mp = engine.plan.mapping_plan()
+    return jnp.asarray([1.0 if mp.get(n) is Mapping.IS else 0.0
+                        for n in names], jnp.float32)
+
+
+class ProbeSet:
+    """One compiled probe evaluator bound to a serving program's engine.
+
+    Construction traces NOTHING; the first `agreement` call compiles the
+    shared gated evaluator, and every later call (any residual, any
+    selector, any gate vector) re-dispatches it.
+    """
+
+    def __init__(self, bundle, program, cfg: ProbeConfig = ProbeConfig()):
+        if not program.engine.variation:
+            raise ValueError(
+                "drift probes need a pinned chip: build the serving "
+                "program with scfg.variation_seed set")
+        self.cfg = cfg
+        self.names = list(program.trace.names)
+        self.chip = dict(program.engine.variation)
+        self.tokens = jax.random.randint(
+            jax.random.PRNGKey(cfg.seed),
+            (cfg.n_probes, cfg.prompt_len), 1, bundle.cfg.vocab, jnp.int32)
+
+        def probe_apply(params, xc, eng):
+            with engine_context(eng):
+                logits, _ = bundle.prefill(params, {"tokens": xc})
+            return logits                              # (B, V) last-token
+
+        base_engine = program.engine.with_ledger(None)
+        self._run = make_plan_eval(
+            probe_apply, base_engine, self.names,
+            eval_batch=cfg.n_probes, gated=True)
+        self.sel = plan_selector(program.engine, self.names)
+        self._ones = jnp.ones(len(self.names), jnp.float32)
+        # ONE fixed probe noise key: probe scores are deterministic
+        # functions of the residual alone (no per-tick per-shot jitter —
+        # the detector sees drift, not dice)
+        self._keys = jax.random.split(jax.random.PRNGKey(cfg.seed + 1), 1)
+        names = self.names
+
+        def preds_fn(params, var, key, sel, g):
+            eng = base_engine.with_variation(var).with_key(key) \
+                .with_mapping_gates({n: sel[i]
+                                     for i, n in enumerate(names)}) \
+                .with_gates({n: g[i] for i, n in enumerate(names)})
+            return chunked_argmax_preds(
+                probe_apply, params,
+                chunk_eval_set(self.tokens, cfg.n_probes), eng)
+
+        self._preds = jax.jit(preds_fn)
+        self._golden = None      # resolved on first scoring (needs params)
+
+    def golden(self, params) -> jnp.ndarray:
+        """Next-token argmax of THIS chip at zero residual under the fixed
+        probe key — the calibration-time behavior every probe is scored
+        against.  Computed once; survives replans (the yardstick must not
+        move when the plan does)."""
+        if self._golden is None:
+            self._golden = self._preds(params, self.chip, self._keys[0],
+                                       self.sel, self._ones)
+        return self._golden
+
+    def rebind(self, program) -> None:
+        """Point the probe scoring at a re-planned program.
+
+        The evaluator itself is NOT rebuilt — mapping choice is a traced
+        `sel` vector, so only the selector changes (the trace, chip and
+        prompt shapes are identical by construction)."""
+        self.sel = plan_selector(program.engine, self.names)
+
+    def agreement(self, params, resid_k: float, tick: int = 0, *,
+                  sel=None, g=None) -> float:
+        """Golden-token agreement in [0, 1] under thermal residual
+        `resid_k` [K]: fraction of probe prompts whose next-token argmax
+        matches the zero-drift golden reference (== 1.0 at resid 0)."""
+        golden = self.golden(params)
+        shifted = V.shift_thermal(self.chip, jnp.float32(resid_k))
+        ens1 = jax.tree.map(lambda leaf: jnp.asarray(leaf)[None], shifted)
+        accs, _, _ = self._run(params, self.tokens, golden, ens1,
+                               self._keys,
+                               self.sel if sel is None else sel,
+                               self._ones if g is None else g)
+        return float(np.asarray(accs)[0]) / 100.0
+
+    def degradation_rows(self, params, resid_k: float,
+                         tick: int = 0) -> dict:
+        """Measure `{layer: {mapping.value: drop_pp}}` at the current
+        residual — the REPLAN input.  Every (mapping x layer) cell is one
+        re-dispatch of the shared evaluator with a one-hot `g` (only that
+        layer analog) and a constant `sel` (its orientation)."""
+        eye = np.eye(len(self.names), dtype=np.float32)
+        rows: dict[str, dict[str, float]] = {n: {} for n in self.names}
+        for mp in (Mapping.WS, Mapping.IS):
+            sel = jnp.full(len(self.names),
+                           1.0 if mp is Mapping.IS else 0.0, jnp.float32)
+            for i, name in enumerate(self.names):
+                agree = self.agreement(params, resid_k, tick,
+                                       sel=sel, g=jnp.asarray(eye[i]))
+                rows[name][mp.value] = max(100.0 * (1.0 - agree),
+                                           _ROW_FLOOR)
+        return rows

@@ -96,6 +96,28 @@ class Completion:
         return self.done_wall - self.enqueue_wall
 
 
+@dataclasses.dataclass(frozen=True)
+class EmptyStat:
+    """Typed sentinel for a percentile over an EMPTY completion set.
+
+    Short drift scenarios can slice a report down to zero completions
+    (e.g. "requests finished before the first probe window"), where
+    `np.percentile` would silently return NaN and poison downstream
+    arithmetic.  The sentinel is falsy and still floats to NaN, so legacy
+    `float(rep.percentile(...))` call sites keep working while callers
+    that care can `isinstance`-check instead of testing `math.isnan`.
+    """
+
+    q: float
+    kind: str
+
+    def __float__(self) -> float:
+        return float("nan")
+
+    def __bool__(self) -> bool:
+        return False
+
+
 @dataclasses.dataclass
 class ServeReport:
     policy: str
@@ -140,18 +162,45 @@ class ServeReport:
                 for c in self.completions.values()]
         return np.asarray(sorted(vals), np.float64)
 
-    def percentile(self, q: float, kind: str = "latency") -> float:
-        return float(np.percentile(self.latencies(kind), q))
+    def percentile(self, q: float, kind: str = "latency"):
+        vals = self.latencies(kind)
+        if vals.size == 0:
+            return EmptyStat(q, kind)
+        return float(np.percentile(vals, q))
 
     def wall_latencies(self, kind: str = "latency") -> np.ndarray:
         """Per-request wall-clock latencies [s]; kind is latency|ttft."""
         vals = [getattr(c, f"{kind}_s") for c in self.completions.values()]
         return np.asarray(sorted(vals), np.float64)
 
-    def wall_percentile_ms(self, q: float,
-                           kind: str = "latency") -> float:
+    def wall_percentile_ms(self, q: float, kind: str = "latency"):
         """q-th percentile of the wall-clock latencies, in ms."""
-        return float(np.percentile(self.wall_latencies(kind), q) * 1e3)
+        vals = self.wall_latencies(kind)
+        if vals.size == 0:
+            return EmptyStat(q, kind)
+        return float(np.percentile(vals, q) * 1e3)
+
+
+class TickHook:
+    """Protocol for per-tick scheduler extensions (drift injection and the
+    adaptive controller live in `repro.serve.adaptive`).
+
+    `step_args(tick)` returns extra TRACED positional args appended to the
+    decode-step call — the installed `Scheduler.step` must accept them
+    (the adaptive package installs a drift-aware step that takes the
+    residual thermal offset as a traced scalar, so per-tick drift never
+    retraces).  `on_tick_end` runs on the host between ticks, after the
+    tick's decode completed — the one place a controller may swap the
+    serving program/steps without perturbing an in-flight step.  Ticks
+    that make no progress (idle-jump to the next arrival) skip both.
+    """
+
+    def step_args(self, tick: int) -> tuple:
+        return ()
+
+    def on_tick_end(self, sched: "Scheduler", tick: int, state,
+                    idle_slots: int) -> None:
+        pass
 
 
 class Scheduler:
@@ -226,9 +275,12 @@ class Scheduler:
 
     # -- the serving loop ---------------------------------------------------
     def run(self, requests: list[Request], policy: str = "continuous",
-            temperature: float | None = None) -> ServeReport:
+            temperature: float | None = None,
+            hook: TickHook | None = None) -> ServeReport:
         """`temperature` overrides scfg.temperature — it is a TRACED scalar,
-        so greedy and sampled runs share one compiled step."""
+        so greedy and sampled runs share one compiled step.  `hook` is a
+        `TickHook`: extra traced decode-step args + an end-of-tick host
+        callback (see the protocol docstring)."""
         if policy not in ("continuous", "oneshot"):
             raise ValueError(policy)
         for r in requests:
@@ -371,9 +423,11 @@ class Scheduler:
 
                     # -- one decode step for the whole batch -------------
                     if any(r is not None for r in slot_rid):
+                        extra = hook.step_args(tick) if hook is not None \
+                            else ()
                         with decode_ctx, self._scope("decode"):
                             state, out = self.step(self.params, state,
-                                                   admit, temp)
+                                                   admit, temp, *extra)
                         if etrack is not None:
                             etrack.tick("decode")
                         rep.decode_steps += 1
@@ -420,6 +474,8 @@ class Scheduler:
                             continue
                         raise RuntimeError(
                             "scheduler deadlock")   # pragma: no cover
+                    if hook is not None:
+                        hook.on_tick_end(self, tick, state, len(free))
                     tick += 1
 
         rep.ticks = tick

@@ -1,0 +1,354 @@
+"""repro.serve.adaptive — closed-loop drift-adaptive serving.
+
+Pinned here:
+
+  * `DriftModel.offsets_at` (the jit-compatible accessor) agrees with the
+    materialized `offsets` grid for all three schedule kinds;
+  * the re-trim math: residuals shrink monotonically with re-trim
+    frequency, and the controller's trim-as-ddt-shift is BIT-exact with
+    `drift.residual_offsets` / `drift.simulate`'s realized weights;
+  * detector semantics (alpha-beta tracking, CUSUM fire + hysteresis);
+  * the bounded LRU `rosa.PlanCache` (gc, touch-on-load, stats, CLI);
+  * the scheduler `TickHook` seam; and
+  * the end-to-end A/B scenario: a forced mid-stream Program swap with
+    zero dropped requests, a bit-exact pre-action epoch, and zero ticks
+    of swap downtime.
+"""
+
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import rosa
+from repro.core import mrr
+from repro.core.constants import Mapping
+from repro.robust import drift as D
+from repro.robust import variation as V
+from repro.serve.adaptive import (ControllerState, DetectorConfig,
+                                  DriftDetector, ScenarioConfig,
+                                  run_scenario)
+from repro.serve.adaptive.probes import _ROW_FLOOR
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+# ---------------------------------------------------------------------------
+# DriftModel.offsets_at parity (the controller's per-tick accessor)
+# ---------------------------------------------------------------------------
+def test_offsets_at_matches_offsets_grid():
+    t = np.linspace(0.0, 3600.0, 49)
+    key = jax.random.PRNGKey(3)
+    for kind in ("sine", "linear", "walk"):
+        dm = D.DriftModel(kind=kind, amp_k=0.4, period_s=3600.0)
+        grid = dm.offsets(t, key)
+        at = np.asarray(dm.offsets_at(t, key=key, t_grid=t))
+        np.testing.assert_allclose(at, grid, atol=2e-6)
+        # scalar query, under jit (the serving tick loop's usage)
+        f = jax.jit(lambda s, d=dm: d.offsets_at(s, key=key, t_grid=t))
+        np.testing.assert_allclose(float(f(t[17])), grid[17], atol=2e-6)
+
+
+def test_offsets_at_walk_needs_key_and_grid():
+    dm = D.DriftModel(kind="walk")
+    with pytest.raises(ValueError):
+        dm.offsets_at(10.0)                       # no key
+    with pytest.raises(ValueError):
+        dm.offsets_at(10.0, key=jax.random.PRNGKey(0))   # no grid
+    with pytest.raises(ValueError):
+        D.DriftModel(kind="nope").offsets_at(10.0)
+
+
+def test_offsets_at_walk_interpolates_between_grid_points():
+    t = np.array([0.0, 100.0, 200.0])
+    dm = D.DriftModel(kind="walk", amp_k=0.5)
+    key = jax.random.PRNGKey(9)
+    grid = dm.offsets(t, key)
+    mid = float(dm.offsets_at(50.0, key=key, t_grid=t))
+    np.testing.assert_allclose(mid, 0.5 * (grid[0] + grid[1]), atol=2e-6)
+
+
+# ---------------------------------------------------------------------------
+# Re-trim math (the controller's actuator model)
+# ---------------------------------------------------------------------------
+def test_retrim_residual_shrinks_with_frequency():
+    """More frequent re-trim => smaller residual.  Deterministic paths
+    (sine / linear) shrink pathwise in RMS; the random walk shrinks in
+    seed-averaged RMS (a single walk can be unlucky at coarse spacing)."""
+    t = np.linspace(0.0, 3600.0, 241)
+    ladder = (None, 1800.0, 900.0, 450.0, 225.0)
+
+    def rms_curve(offs):
+        return [float(np.sqrt(np.mean(
+            D.residual_offsets(offs, t, ev) ** 2))) for ev in ladder]
+
+    for kind in ("sine", "linear"):
+        dm = D.DriftModel(kind=kind, amp_k=0.5, period_s=3600.0)
+        rms = rms_curve(dm.offsets(t))
+        assert all(a >= b - 1e-12 for a, b in zip(rms, rms[1:])), \
+            (kind, rms)
+        assert rms[-1] < 0.25 * rms[0]
+
+    dm = D.DriftModel(kind="walk", amp_k=0.5, period_s=3600.0)
+    acc = np.zeros(len(ladder))
+    for s in range(16):
+        offs = dm.offsets(t, jax.random.PRNGKey(s))
+        acc += [np.mean(D.residual_offsets(offs, t, ev) ** 2)
+                for ev in ladder]
+    rms = np.sqrt(acc / 16)
+    assert all(a >= b - 1e-12 for a, b in zip(rms, rms[1:])), rms
+
+
+def test_trim_is_offset_subtraction_on_the_plant():
+    """The controller models a re-trim at estimate d_hat as shrinking the
+    injected offset to (d - d_hat).  Physically the trim re-programs the
+    voltages (`trim_voltages(w, d_hat)`) while the FULL offset d stays on
+    the rings — the two must realize the same weights (away from heater
+    saturation)."""
+    w = jnp.linspace(-0.7, 0.5, 25)
+    d, d_hat = jnp.float32(0.35), jnp.float32(0.3)
+    physical = mrr.weight_of_voltage(
+        D.trim_voltages(w, d_hat),
+        var=mrr.StaticVariation(jnp.zeros(()), d, jnp.zeros(())))
+    modeled = mrr.weight_of_voltage(
+        jnp.clip(mrr.voltage_of_weight(w), mrr.DEFAULT_PARAMS.v_min,
+                 mrr.DEFAULT_PARAMS.v_max),
+        var=mrr.StaticVariation(jnp.zeros(()), d - d_hat, jnp.zeros(())))
+    np.testing.assert_allclose(np.asarray(physical), np.asarray(modeled),
+                               atol=1e-5)
+
+
+def test_controller_residual_bitexact_with_simulate():
+    """One drift step through the controller's plant model — trim at the
+    last trim instant, `shift_thermal(chip, d(t) - d(trim))` — realizes
+    the SAME weights, bit for bit, as `drift.simulate`'s
+    `residual_offsets` + `shift_thermal` path."""
+    t = np.linspace(0.0, 1800.0, 7)
+    dm = D.DriftModel(kind="sine", amp_k=0.5, period_s=3600.0)
+    offs = dm.offsets(t)
+    i, retrim_every = 5, 600.0
+    # simulate's residual at step i
+    resid_sim = D.residual_offsets(offs, t, retrim_every)[i]
+    # controller's residual: true offset minus the trim applied at the
+    # last trim instant <= t[i]
+    t_trim = (t[i] // retrim_every) * retrim_every
+    trim_k = dm.offsets(np.array([t_trim]))[0]
+    resid_ctl = offs[i] - trim_k
+    assert resid_sim == resid_ctl    # exact: same float subtraction
+
+    chip = V.sample_chip(jax.random.PRNGKey(4), {"a": 6})
+    w = jax.random.normal(jax.random.PRNGKey(5), (6, 8)) * 0.4
+    shifted = V.shift_thermal(chip, jnp.float32(resid_ctl))["a"]
+    reference = V.shift_thermal(chip, jnp.float32(resid_sim))["a"]
+    np.testing.assert_array_equal(np.asarray(shifted.ddt),
+                                  np.asarray(reference.ddt))
+    w_col = w[:, 0]                  # variation is per k-row
+    np.testing.assert_array_equal(
+        np.asarray(mrr.realize_weights(w_col, var=shifted)),
+        np.asarray(mrr.realize_weights(w_col, var=reference)))
+
+    # and through the engine: with_variation on the shifted chip routes
+    # the identical realized weights into the matmul
+    eng = rosa.Engine.from_config(rosa.RosaConfig(), layers=["a"])
+    x = jax.random.normal(jax.random.PRNGKey(6), (3, 6))
+    out_ctl = eng.with_variation({"a": shifted}).matmul(x, w, name="a")
+    out_sim = eng.with_variation({"a": reference}).matmul(x, w, name="a")
+    np.testing.assert_array_equal(np.asarray(out_ctl), np.asarray(out_sim))
+
+
+# ---------------------------------------------------------------------------
+# Detector
+# ---------------------------------------------------------------------------
+def test_detector_tracks_ramp_with_prediction():
+    det = DriftDetector(DetectorConfig(), ref_agreement=1.0)
+    slope = 0.05
+    for i in range(20):
+        det.observe_temp(slope * i)        # noiseless ramp
+    # alpha-beta has zero steady-state lag on a ramp; predict() leads by
+    # one observation
+    assert abs(det.predict() - slope * 20) < 5e-3
+    assert abs(det.temp_rate_k - slope) < 5e-3
+
+
+def test_detector_cusum_fire_and_hysteresis():
+    cfg = DetectorConfig(cusum_k=0.02, cusum_h=0.04, rearm=2)
+    det = DriftDetector(cfg, ref_agreement=1.0)
+    assert not det.update(0.99)            # inside slack: never accumulates
+    assert det.cusum == 0.0
+    assert not det.update(0.95)            # 0.03 accumulated, below h
+    assert det.update(0.95)                # 0.06 > h: fired
+    assert det.update(1.0)                 # decaying toward the threshold
+    assert det.update(1.0)                 # first clean in-band probe
+    assert not det.update(1.0)             # second in-band: re-armed
+    assert det.cusum == 0.0 and not det.fired
+
+    det.update(0.9)
+    det.update(0.9)
+    assert det.fired
+    det.reset()                            # corrective action re-arms
+    assert not det.fired and det.cusum == 0.0
+
+
+# ---------------------------------------------------------------------------
+# PlanCache: bounded LRU store + CLI
+# ---------------------------------------------------------------------------
+def _fill(cache, names):
+    for n in names:
+        cache.store_matrix(n, {"layer": {"weight_stationary": 1.0}})
+
+
+def test_plancache_gc_bound_and_lru(tmp_path):
+    cache = rosa.PlanCache(tmp_path, max_entries=3)
+    _fill(cache, [f"k{i}" for i in range(6)])    # gc runs after each store
+    assert cache.stats()["entries"] == 3
+    # oldest evicted, newest kept
+    kept = {p.name for p in tmp_path.iterdir()}
+    assert kept == {"k3.deg.json", "k4.deg.json", "k5.deg.json"}
+
+    # a load touches the entry: it becomes MRU and survives the next gc
+    os.utime(tmp_path / "k4.deg.json", (1.0, 1.0))
+    os.utime(tmp_path / "k5.deg.json", (2.0, 2.0))
+    assert cache.load_matrix("k3") is not None   # k3 -> MRU
+    assert cache.gc(1) == 2
+    assert {p.name for p in tmp_path.iterdir()} == {"k3.deg.json"}
+
+
+def test_plancache_stats_and_validation(tmp_path):
+    with pytest.raises(ValueError):
+        rosa.PlanCache(tmp_path, max_entries=0)
+    cache = rosa.PlanCache(tmp_path)             # unbounded
+    assert cache.gc() == 0                       # no-op without a bound
+    with pytest.raises(ValueError):
+        cache.gc(0)
+    _fill(cache, ["a", "b"])
+    st = cache.stats()
+    assert st["entries"] == 2 and st["matrices"] == 2 and st["plans"] == 0
+    assert st["bytes"] > 0 and st["max_entries"] is None
+    assert st["root"] == str(tmp_path)
+    json.dumps(st)                               # CLI-serializable
+
+
+def test_plancache_cli_stats_and_gc(tmp_path):
+    cache = rosa.PlanCache(tmp_path)
+    _fill(cache, [f"k{i}" for i in range(4)])
+    env = dict(os.environ, PYTHONPATH=SRC)
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.rosa", "stats", "--root",
+         str(tmp_path)], capture_output=True, text=True, env=env,
+        check=True)
+    st = json.loads(out.stdout)
+    assert st["entries"] == 4
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.rosa", "gc", "--max-entries", "2",
+         "--root", str(tmp_path)], capture_output=True, text=True, env=env,
+        check=True)
+    doc = json.loads(out.stdout)
+    assert doc["evicted"] == 2 and doc["entries"] == 2
+
+
+# ---------------------------------------------------------------------------
+# Scheduler TickHook seam
+# ---------------------------------------------------------------------------
+def test_tick_hook_called_every_tick():
+    from repro.configs import get_smoke
+    from repro.serve import Request, Scheduler, ServeConfig, TickHook
+
+    cfg = get_smoke("qwen3-32b")
+    sched = Scheduler(cfg, ServeConfig(n_slots=2, max_len=24,
+                                       prefill_chunk=4))
+    reqs = [Request(0, np.arange(1, 5), 4, arrival=0),
+            Request(1, np.arange(2, 8), 3, arrival=1)]
+
+    class Counting(TickHook):
+        calls: list = []
+
+        def on_tick_end(self, sched, tick, state, idle_slots):
+            self.calls.append((tick, idle_slots))
+
+    hook = Counting()
+    rep = sched.run(reqs, hook=hook)
+    assert len(rep.completions) == 2
+    ticks = [t for t, _ in hook.calls]
+    assert ticks == sorted(set(ticks))           # once per executed tick
+    assert all(0 <= idle <= 2 for _, idle in hook.calls)
+    assert hook.step_args(0) == ()               # default: no extra args
+
+    # the hooked run is a pure observer: streams match the hook-free run
+    rep2 = sched.run(reqs)
+    for rid in (0, 1):
+        assert rep.completions[rid].tokens == rep2.completions[rid].tokens
+
+
+# ---------------------------------------------------------------------------
+# End-to-end scenario: the A/B with a forced mid-stream swap
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def scen():
+    cfg = ScenarioConfig(n_requests=6, n_probes=8, period_ticks=64.0,
+                         warmup_ticks=4, force_replan_at=10)
+    res, reqs = run_scenario(cfg)
+    return res, reqs
+
+
+def test_scenario_zero_drops_and_swap_continuity(scen):
+    res, reqs = scen
+    ctl = res.controller
+    assert res.dropped_requests(reqs) == 0
+    assert ctl.replans == 1                      # the forced swap happened
+    assert all(s["downtime_ticks"] == 0 for s in ctl.swaps)
+    # the swap rebound the scheduler onto a fresh program
+    assert ctl.swaps[0]["plan"]                  # searched mapping plan
+    assert res.summary()["swap_wall_ms"] > 0
+
+
+def test_scenario_epoch_bitexact_and_recovery(scen):
+    res, _ = scen
+    n_epoch, exact = res.epoch_bitexact()
+    assert exact                                 # vacuous only if n == 0
+    assert res.ref_agreement == 1.0              # golden self-agreement
+    assert res.controller.mean_agreement > res.monitor.mean_agreement
+    assert 0.0 < res.recovery <= 1.0
+    assert res.first_action_tick >= res.cfg.warmup_ticks
+
+
+def test_scenario_controller_acted(scen):
+    res, _ = scen
+    ctl = res.controller
+    assert ctl.retrims >= 1 and ctl.trim_updates >= ctl.retrims
+    assert ctl.tracking                          # servo engaged and sticky
+    assert ctl.state in tuple(ControllerState)
+    # telemetry rows carry the full signal set
+    row = ctl.series[-1]
+    assert {"tick", "resid_k", "agreement", "trim_k",
+            "energy_per_token_j"} <= set(row)
+    assert row["energy_per_token_j"] > 0
+
+
+def test_probes_deterministic_and_monotone(scen):
+    """Probe agreement is a pure function of the residual: one fixed
+    noise key, one pinned chip — repeat calls agree exactly, and the
+    score decays away from zero residual."""
+    res, _ = scen
+    probes, params = res.controller.probes, res.sched.params
+    a = probes.agreement(params, 0.25)
+    assert a == probes.agreement(params, 0.25)
+    assert 0.0 <= a <= 1.0
+    assert probes.agreement(params, 0.0) >= probes.agreement(params, 0.6)
+
+
+def test_degradation_rows_format(scen):
+    """REPLAN measurement: `{layer: {mapping: pp}}` rows in exactly the
+    format `rosa.compile(degradation=...)` consumes, floored so a
+    measured-zero row can't look infinitely safe to the plan search."""
+    res, _ = scen
+    rows = res.controller.probes.degradation_rows(res.sched.params, 0.2)
+    assert set(rows) == set(res.controller.probes.names)
+    for row in rows.values():
+        assert set(row) == {Mapping.WS.value, Mapping.IS.value}
+        assert all(v >= _ROW_FLOOR for v in row.values())
+    json.dumps(rows)                             # PlanCache-serializable

@@ -298,6 +298,23 @@ def test_loadgen_deterministic(smoke_cfg):
                for x, y in zip(a, c))
 
 
+def test_empty_report_percentiles_are_typed_sentinels():
+    """Percentiles over zero completions return the falsy `EmptyStat`
+    sentinel (NaN via float()) instead of a silent bare NaN — short drift
+    scenarios legitimately slice reports down to empty sets."""
+    import math
+
+    from repro.serve import EmptyStat, ServeReport
+
+    rep = ServeReport(policy="continuous", completions={}, n_slots=2)
+    for stat in (rep.percentile(99), rep.wall_percentile_ms(50, "ttft")):
+        assert isinstance(stat, EmptyStat)
+        assert not stat                          # falsy: `or default` works
+        assert math.isnan(float(stat))           # legacy float() sites
+    assert rep.percentile(99).q == 99
+    assert rep.wall_percentile_ms(50, "ttft").kind == "ttft"
+
+
 def test_report_metrics_surface(smoke_cfg, sched):
     """The bench-schema metric view of a run: gated metrics are the
     deterministic (step-unit / tick) ones; wall-clock never gates."""
